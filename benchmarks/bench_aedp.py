@@ -1,0 +1,89 @@
+"""Paper Table II — AEDP (area·energy·delay product) analog on TPU.
+
+The circuit AEDP has no direct TPU meaning; its TPU analog per decode step:
+  area   → HBM bytes RESIDENT for the cache (fixed budget vs growing)
+  energy → HBM bytes MOVED by the attention step (energy ∝ DRAM traffic)
+  delay  → roofline-bound step latency (max of compute/memory terms)
+AEDP_analog = resident_bytes × moved_bytes × bound_latency, reported as a
+reduction ratio vs the dense-cache baseline at 0/50/80% pruning — the same
+sweep as Table II. Also measures real CPU wall time as a sanity proxy.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.configs.base import PruneConfig
+from repro.core import baselines
+from repro.core.attention import decode_attention
+from repro.core.cache import init_cache
+from repro.core.pruning import memory_footprint_bytes
+from repro.core.quant import mirror_bytes_per_token
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+
+# paper's setup: 576-token cache (512 heavy + 64 reserved), d=128
+B, HK, HQ, D = 4, 4, 4, 128
+SEQ = 576
+
+
+def step_bytes_moved(n_attend: int, n_scored: int, score_bits: int,
+                     kv_bytes: int = 2) -> int:
+    """HBM bytes one decode step touches in attention."""
+    mirror = n_scored * HK * mirror_bytes_per_token(D, score_bits) \
+        if n_scored else 0
+    exact = 2 * n_attend * HK * D * kv_bytes          # K and V rows
+    return mirror + exact
+
+
+def step_flops(n_attend: int, n_scored: int) -> int:
+    return 2 * HQ * D * (n_attend + n_scored)
+
+
+def run():
+    results = {}
+    for label, ratio in (("no_prune", 0.0), ("prune50", 0.5),
+                         ("prune80", 0.8)):
+        keep = int(SEQ * (1 - ratio)) or 1
+        for mode, bits in (("1bit", 1), ("3bit", 3)):
+            if label == "no_prune":
+                prune = baselines.dense(SEQ)
+                n_attend, n_scored = SEQ, 0
+                resident = memory_footprint_bytes(SEQ, HK, D, prune)
+            else:
+                select = max(1, keep // 4)
+                prune = baselines.unicaim(
+                    heavy=keep - 32, reserve=32, select_k=select,
+                    score_bits=bits, sink_tokens=2, recent_window=8)
+                n_attend, n_scored = select, keep
+                resident = memory_footprint_bytes(SEQ, HK, D, prune)
+            moved = step_bytes_moved(n_attend, n_scored,
+                                     prune.score_bits)
+            delay = max(step_flops(n_attend, n_scored) / PEAK_FLOPS,
+                        moved / HBM_BW)
+            aedp = resident * moved * delay
+
+            cache = init_cache(B, HK, D, prune.slots, prune, jnp.float32)
+            fn = jax.jit(lambda c, q, k, v, p=prune:
+                         decode_attention(c, q, k, v, p))
+            ks = jax.random.split(jax.random.PRNGKey(0), 3)
+            q = jax.random.normal(ks[0], (B, HQ, D))
+            kn = jax.random.normal(ks[1], (B, HK, D))
+            vn = jax.random.normal(ks[2], (B, HK, D))
+            # warm the cache
+            c = cache
+            for i in range(8):
+                c, _ = fn(c, q, kn, vn)
+            us = time_fn(lambda: fn(c, q, kn, vn))
+            results[(label, mode)] = aedp
+            base = results.get(("no_prune", "1bit"), aedp)
+            emit(f"aedp_{label}_{mode}", us,
+                 f"aedp_reduction_vs_dense={base / aedp:.1f}x;"
+                 f"resident_B={resident};moved_B={moved};"
+                 f"delay_us={delay * 1e6:.3f}")
+            if label == "no_prune":
+                break   # dense is bit-independent
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Paper Fig. 11 — energy vs sequence length. On TPU, decode energy is
+dominated by HBM traffic; we report bytes moved per decode step (dense vs
+UniCAIM) across input lengths (output=64) and output lengths (input=2048),
+mirroring the paper's 5.3×→27× energy-efficiency trend."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import baselines
+from repro.core.quant import mirror_bytes_per_token
+
+HK, HQ, D = 8, 32, 128
+L = 32                       # layers
+
+
+def step_bytes(policy: str, ctx: int, budget: int = 576,
+               select_k: int = 64, bits: int = 3) -> int:
+    """Per-decode-step HBM bytes for attention across L layers."""
+    if policy == "dense":
+        n = ctx
+        return L * 2 * n * HK * D * 2                 # read all K and V
+    n = min(ctx, budget)
+    mirror = L * n * HK * mirror_bytes_per_token(D, bits)
+    exact = L * 2 * select_k * HK * D * 2
+    return mirror + exact
+
+
+def run():
+    for n_in in (512, 1024, 2048, 4096, 8192, 16384, 32768):
+        ctx = n_in + 64
+        dense_b = step_bytes("dense", ctx)
+        uni_b = step_bytes("unicaim", ctx)
+        emit(f"energy_in{n_in}", 0.0,
+             f"dense_B={dense_b};unicaim_B={uni_b};"
+             f"energy_reduction={dense_b / uni_b:.1f}x")
+    for n_out in (64, 256, 1024, 4096, 16384):
+        ctx = 2048 + n_out
+        dense_b = step_bytes("dense", ctx)
+        uni_b = step_bytes("unicaim", ctx)
+        emit(f"energy_out{n_out}", 0.0,
+             f"dense_B={dense_b};unicaim_B={uni_b};"
+             f"energy_reduction={dense_b / uni_b:.1f}x")
+
+
+if __name__ == "__main__":
+    run()

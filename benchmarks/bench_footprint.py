@@ -1,0 +1,42 @@
+"""Paper Fig. 10 — KV-cache footprint ("device count") vs sequence length.
+
+Reports per-layer KV bytes as input (a) and output (b) lengths grow, for
+dense vs static-pruned vs static+dynamic UniCAIM (the mirror adds a small
+overhead, mirroring the paper's 15× → 14.7× note)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import baselines
+from repro.core.pruning import memory_footprint_bytes
+
+HK, D = 8, 128
+
+
+def run():
+    budget = 576
+    policies = {
+        "dense": baselines.dense(10 ** 9),
+        "static": baselines.h2o(heavy=budget - 64, reserve=64),
+        "unicaim": baselines.unicaim(heavy=budget - 64, reserve=64,
+                                     select_k=64, score_bits=3),
+    }
+    # (a) input sweep, 64 generated
+    for n_in in (512, 1024, 2048, 4096, 8192, 16384, 32768):
+        row = {}
+        for name, p in policies.items():
+            row[name] = memory_footprint_bytes(n_in + 64, HK, D, p)
+        emit(f"footprint_in{n_in}", 0.0,
+             f"dense_B={row['dense']};static_B={row['static']};"
+             f"unicaim_B={row['unicaim']};"
+             f"reduction={row['dense'] / row['unicaim']:.1f}x")
+    # (b) output sweep, 2048 input
+    for n_out in (64, 256, 1024, 4096, 16384):
+        row = {name: memory_footprint_bytes(2048 + n_out, HK, D, p)
+               for name, p in policies.items()}
+        emit(f"footprint_out{n_out}", 0.0,
+             f"dense_B={row['dense']};unicaim_B={row['unicaim']};"
+             f"reduction={row['dense'] / row['unicaim']:.1f}x")
+
+
+if __name__ == "__main__":
+    run()

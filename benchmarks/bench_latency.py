@@ -1,0 +1,58 @@
+"""Paper Fig. 12 — decode latency. Two views:
+  * measured CPU wall-time per decode attention step (dense vs UniCAIM)
+    at growing context — the paper's 'delay' with real code;
+  * derived v5e roofline latency (memory term dominates decode).
+The paper's ADC-count serialization has no TPU analog (DESIGN.md §7)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import baselines
+from repro.core.attention import decode_attention
+from repro.core.cache import init_cache
+from repro.launch.roofline import HBM_BW
+
+B, HK, HQ, D = 2, 4, 8, 64
+
+
+def run():
+    for ctx in (512, 1024, 2048, 4096):
+        budget = 576
+        dense = baselines.dense(ctx)
+        uni = baselines.unicaim(heavy=budget - 64, reserve=64, select_k=64,
+                                score_bits=3, sink_tokens=2,
+                                recent_window=8)
+        rows = {}
+        for name, prune, slots in (("dense", dense, ctx),
+                                   ("unicaim", uni, uni.slots)):
+            cache = init_cache(B, HK, D, slots, prune, jnp.float32)
+            fn = jax.jit(lambda c, q, k, v, p=prune:
+                         decode_attention(c, q, k, v, p))
+            ks = jax.random.split(jax.random.PRNGKey(0), 3)
+            q = jax.random.normal(ks[0], (B, HQ, D))
+            kn = jax.random.normal(ks[1], (B, HK, D))
+            vn = jax.random.normal(ks[2], (B, HK, D))
+            c = cache
+            for _ in range(min(slots + 8, 600) // 8):
+                c, _ = fn(c, q, kn, vn)   # fill
+            us = time_fn(lambda: fn(c, q, kn, vn))
+            # v5e derived latency: bytes moved / HBM bandwidth
+            if name == "dense":
+                bytes_moved = 2 * ctx * HK * D * 2
+            else:
+                from repro.core.quant import mirror_bytes_per_token
+                bytes_moved = (min(ctx, uni.slots) * HK
+                               * mirror_bytes_per_token(D, 3)
+                               + 2 * uni.select_k * HK * D * 2)
+            rows[name] = (us, bytes_moved / HBM_BW * 1e6)
+            emit(f"latency_{name}_ctx{ctx}", us,
+                 f"v5e_us={rows[name][1]:.2f}")
+        emit(f"latency_speedup_ctx{ctx}", 0.0,
+             f"measured={rows['dense'][0] / rows['unicaim'][0]:.2f}x;"
+             f"v5e_derived={rows['dense'][1] / rows['unicaim'][1]:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

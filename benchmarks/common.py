@@ -1,0 +1,56 @@
+"""Shared benchmark utilities: timing, CSV emission, tiny trained model."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def time_fn(fn, *args, warmup=2, iters=5):
+    """Median wall-time (µs) of a jitted callable."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+_MODEL_CACHE = {}
+
+
+def tiny_trained_model(steps: int = 80, seed: int = 0):
+    """A small LM trained on synthetic data — shared across accuracy
+    benchmarks so policies are compared on a model with real structure."""
+    key = ("m", steps, seed)
+    if key in _MODEL_CACHE:
+        return _MODEL_CACHE[key]
+    from repro.configs.base import get_config, reduced
+    from repro.core import baselines
+    from repro.data.pipeline import SyntheticSource
+    from repro.launch.train import init_train_state, make_train_step
+    from repro.models.transformer import Model
+    from repro.optim import adamw
+
+    cfg = reduced(get_config("longchat-7b"), num_layers=3, d_model=96,
+                  n_heads=6, n_kv_heads=6, head_dim=16, d_ff=192,
+                  vocab_size=512)
+    prune = baselines.dense(512)
+    model = Model(cfg, prune)
+    opt_cfg = adamw.AdamWConfig(lr=3e-3)
+    state = init_train_state(model, opt_cfg, jax.random.PRNGKey(seed))
+    step = jax.jit(make_train_step(model, opt_cfg, total_steps=steps,
+                                   peak_lr=3e-3, warmup=10))
+    src = SyntheticSource(cfg.vocab_size, 128, seed=seed)
+    for i in range(steps):
+        state, m = step(state, {"tokens": jnp.asarray(src.batch(i, 8))})
+    _MODEL_CACHE[key] = (cfg, state.params, src)
+    return _MODEL_CACHE[key]

@@ -1,0 +1,34 @@
+"""Benchmark harness — one bench per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (EXPERIMENTS.md indexes them).
+  Table II → bench_aedp        Fig 10 → bench_footprint
+  Fig 11  → bench_energy       Fig 12 → bench_latency
+  Fig 13  → bench_accuracy     Fig 9  → bench_fidelity
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+BENCHES = ("aedp", "footprint", "energy", "latency", "fidelity",
+           "accuracy", "needle")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help=f"comma list from {BENCHES}")
+    args = ap.parse_args(argv)
+    wanted = args.only.split(",") if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    for name in wanted:
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        t0 = time.time()
+        mod.run()
+        print(f"bench_{name}_total,{(time.time() - t0) * 1e6:.0f},done",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

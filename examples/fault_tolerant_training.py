@@ -1,0 +1,84 @@
+"""End-to-end training driver with fault tolerance — trains a ~small LM for
+a few hundred steps through the production loop: synthetic data pipeline,
+AdamW (+warmup-cosine), periodic checkpoints, an INJECTED node failure at
+step 120 (the loop restores from the last checkpoint and continues), and a
+final eval rollout. This is deliverable (b)'s end-to-end driver.
+
+Run:  PYTHONPATH=src python examples/fault_tolerant_training.py [--steps 300]
+"""
+import argparse
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import get_config, reduced
+from repro.core import baselines
+from repro.data.pipeline import SyntheticSource
+from repro.launch.serve import greedy_generate
+from repro.launch.train import init_train_state, make_train_step
+from repro.models.transformer import Model
+from repro.optim import adamw
+from repro.runtime import fault
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config("granite-3-2b"), num_layers=3, d_model=128,
+                  n_heads=8, n_kv_heads=4, head_dim=16, d_ff=256,
+                  vocab_size=512)
+    prune = baselines.unicaim(heavy=80, reserve=16, select_k=32,
+                              sink_tokens=2, recent_window=8)
+    model = Model(cfg, prune)
+    opt_cfg = adamw.AdamWConfig(lr=3e-3)
+    state = init_train_state(model, opt_cfg, jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(state.params))
+    print(f"training {cfg.name}-reduced: {n_params/1e6:.2f}M params, "
+          f"{args.steps} steps, batch {args.batch} x seq {args.seq}")
+
+    step_fn = jax.jit(make_train_step(model, opt_cfg, args.steps,
+                                      peak_lr=3e-3, warmup=20))
+    src = SyntheticSource(cfg.vocab_size, args.seq, seed=0)
+    ckpt_dir = tempfile.mkdtemp(prefix="repro_ft_")
+    ckpt = CheckpointManager(ckpt_dir, keep=2)
+
+    crash = {"armed": True}
+    def inject(step):
+        if step == 120 and crash["armed"]:
+            crash["armed"] = False
+            print(">>> injecting node failure at step 120 <<<")
+            raise RuntimeError("simulated preemption")
+
+    def data_iter(step):
+        return {"tokens": jnp.asarray(src.batch(step, args.batch))}
+
+    def on_metrics(step, m):
+        if step % 25 == 0:
+            print(f"  step {step:4d}  loss {float(m['loss']):.4f}  "
+                  f"lr {float(m['lr']):.2e}  gnorm {float(m['grad_norm']):.2f}")
+
+    state, stats = fault.run_training(
+        step_fn, state, data_iter, args.steps, ckpt,
+        fault.FaultConfig(ckpt_every=50, max_restarts=2,
+                          step_deadline_s=30.0),
+        inject_failure=inject, on_metrics=on_metrics)
+
+    print(f"finished: {stats.steps} productive steps, "
+          f"{stats.restarts} restart(s), "
+          f"loss {stats.losses[0]:.3f} → {stats.losses[-1]:.3f}")
+
+    toks, _ = greedy_generate(model, state.params,
+                              {"tokens": jnp.asarray(src.batch(9999, 2)[:, :64])},
+                              steps=16)
+    print("sample generation ids:", np.asarray(toks)[0][:16].tolist())
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Quickstart: the UniCAIM technique on a small model in ~2 minutes (CPU).
+
+  1. build a reduced granite-3-2b with UniCAIM static-dynamic pruning
+  2. prefill a prompt → one-shot static pruning fills the fixed-slot cache
+  3. decode with CAM-mode approximate scoring + top-k + static eviction
+  4. compare against the dense-cache reference
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config, reduced
+from repro.core import baselines
+from repro.models.transformer import Model
+
+def main():
+    cfg = reduced(get_config("granite-3-2b"))
+    print(f"model: {cfg.name} (reduced) — {cfg.num_layers}L d{cfg.d_model} "
+          f"{cfg.n_heads}H/{cfg.n_kv_heads}KV")
+
+    # the paper's technique: H heavy slots + M reserve, 3-bit CAM mirror,
+    # top-k dynamic selection, accumulated-score static eviction
+    prune = baselines.unicaim(heavy=48, reserve=16, select_k=16,
+                              score_bits=3, query_bits=4,
+                              sink_tokens=2, recent_window=8)
+    model = Model(cfg, prune)
+    params = model.init(jax.random.PRNGKey(0))
+
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (1, 80), 0,
+                                cfg.vocab_size)
+    logits, state = jax.jit(model.prefill)(params, {"tokens": prompt})
+    kept = int(state.kv.valid[0, 0, 0].sum())
+    print(f"prefill: 80 prompt tokens → {kept} kept "
+          f"(budget {prune.slots} slots, {prune.score_bits}-bit mirror)")
+
+    dense = Model(cfg, baselines.dense(256))
+    lg_d, st_d = jax.jit(dense.prefill)(params, {"tokens": prompt})
+
+    decode = jax.jit(model.decode_step)
+    decode_d = jax.jit(dense.decode_step)
+    tok = jnp.argmax(logits, -1)
+    drift = 0.0
+    for i in range(24):
+        logits, state = decode(params, state, tok)
+        lg_d, st_d = decode_d(params, st_d, tok)
+        drift += float(jnp.mean(jnp.abs(jax.nn.softmax(logits)
+                                        - jax.nn.softmax(lg_d))))
+        tok = jnp.argmax(lg_d, -1)
+    print(f"decode: 24 steps, mean softmax drift vs dense cache: "
+          f"{drift / 24:.2e} (untrained weights — see "
+          f"benchmarks/bench_accuracy.py for the trained-model comparison)")
+    print(f"cache is fixed-size: {int(state.kv.valid[0,0,0].sum())} slots "
+          f"after decoding past the budget (dense grew to "
+          f"{int(st_d.kv.valid[0,0,0].sum())})")
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""UniCAIM core: static-dynamic KV cache pruning as composable JAX modules."""
+from repro.core.attention import chunked_causal_attention, decode_attention
+from repro.core.cache import KVCache, init_cache, prefill_fill, write_token
+from repro.core.pruning import memory_footprint_bytes, prefill_and_prune
+
+__all__ = [
+    "KVCache", "init_cache", "write_token", "prefill_fill",
+    "decode_attention", "chunked_causal_attention",
+    "prefill_and_prune", "memory_footprint_bytes",
+]

@@ -1,0 +1,348 @@
+"""UniCAIM attention — the three computation modes composed (§III-B).
+
+Decode step:  CAM mode (approximate scoring over the quantized mirror)
+              → top-k selection → current-domain mode (exact attention over
+              the gathered k tokens) → charge-domain mode (accumulated-score
+              update) → static eviction on the next write.
+
+Prefill:      chunked causal attention (flash-style online softmax in XLA,
+              Pallas kernel on TPU) that produces per-token accumulated
+              attention column sums "for free" → one-shot static pruning.
+
+All paths are pure functions: (cache, inputs) → (cache, outputs), so the
+decode loop is a lax.scan and the whole model jits/shards with pjit.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.flags import xscan
+
+from repro.configs.base import PruneConfig
+from repro.core import quant, scoring, topk
+from repro.core.cache import KVCache, protected_mask, write_token
+from repro.core.topk import NEG_INF
+from repro.runtime.sharding import shard
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+
+def _dense_attend(cache: KVCache, q: jax.Array, head_dim_scale: int,
+                  mask: Optional[jax.Array] = None):
+    """Exact attention over all (valid) cache slots.
+
+    q: [B, Hq, d] → out [B, Hq, dv]; also returns probs [B, Hq, S].
+    """
+    s_exact = scoring.exact_scores(q, cache.k_values(), cache.valid)
+    if mask is not None:
+        s_exact = jnp.where(mask, s_exact, NEG_INF)
+    probs = scoring.score_probs(s_exact, head_dim_scale)          # [B,Hq,S]
+    b, hq, s = probs.shape
+    hk = cache.k.shape[1]
+    g = hq // hk
+    p = probs.reshape(b, hk, g, s)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p,
+                     cache.v_values().astype(jnp.float32))
+    return out.reshape(b, hq, -1), probs
+
+
+def _gathered_attend_blocked(cache: KVCache, q: jax.Array, idx: jax.Array,
+                             head_dim_scale: int):
+    """Exact attention over block-local top-k slots (distributed CAM race).
+
+    idx: [B, Hk, nb, k_loc] — per-block winners. All gathers index the
+    UNSHARDED intra-block axis, so with slots sharded over `model` and
+    blocks aligned to shards, no cache bytes cross the interconnect; only
+    the [B, Hq] softmax stats and the [B, Hq, dv] partial outputs reduce.
+    """
+    b, hq, d = q.shape
+    _, hk, nb, k_loc = idx.shape
+    g = hq // hk
+    s = cache.k.shape[2]
+    # re-pin shardings: reshape splits the sharded slot axis into
+    # (blocks, slots/blocks) — the constraint keeps blocks on `model` so
+    # the gathers below stay shard-local (no cache all-gather)
+    kb = shard(cache.k.reshape(b, hk, nb, s // nb, d),
+               "batch", "kv_heads", "slots", None, None)
+    vb = shard(cache.v.reshape(b, hk, nb, s // nb, -1),
+               "batch", "kv_heads", "slots", None, None)
+    validb = shard(cache.valid.reshape(b, hk, nb, s // nb),
+                   "batch", "kv_heads", "slots", None)
+    k_sel = jnp.take_along_axis(kb, idx[..., None], axis=3)   # [B,Hk,nb,kl,d]
+    v_sel = jnp.take_along_axis(vb, idx[..., None], axis=3)
+    valid_sel = jnp.take_along_axis(validb, idx, axis=3)
+    if cache.quantized_kv:
+        ks_b = cache.kscale.reshape(b, hk, nb, s // nb)
+        vs_b = cache.vscale.reshape(b, hk, nb, s // nb)
+        k_sel = (k_sel.astype(jnp.float32)
+                 * jnp.take_along_axis(ks_b, idx, axis=3)[..., None])
+        v_sel = (v_sel.astype(jnp.float32)
+                 * jnp.take_along_axis(vs_b, idx, axis=3)[..., None])
+    q_g = q.reshape(b, hk, g, d).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bhnkd->bhgnk", q_g,
+                        k_sel.astype(jnp.float32))
+    logits = logits / jnp.sqrt(jnp.float32(head_dim_scale))
+    logits = jnp.where(valid_sel[:, :, None, :, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=(-2, -1), keepdims=True)         # cross-block
+    e = jnp.exp(logits - jax.lax.stop_gradient(m))
+    e = e * (logits > NEG_INF / 2)
+    z = jnp.sum(e, axis=(-2, -1), keepdims=True)
+    p = e / jnp.maximum(z, 1e-30)
+    out = jnp.einsum("bhgnk,bhnkd->bhgd", p, v_sel.astype(jnp.float32))
+    return out.reshape(b, hq, -1)
+
+
+def _gathered_attend(cache: KVCache, q: jax.Array, idx: jax.Array,
+                     head_dim_scale: int):
+    """Exact attention over gathered top-k slots (current-domain CIM).
+
+    q: [B, Hq, d]; idx: [B, Hk, k] slot indices → out [B, Hq, dv].
+    """
+    b, hq, d = q.shape
+    _, hk, k = idx.shape
+    g = hq // hk
+    k_sel = jnp.take_along_axis(cache.k, idx[..., None], axis=2)   # [B,Hk,k,d]
+    v_sel = jnp.take_along_axis(cache.v, idx[..., None], axis=2)
+    valid_sel = jnp.take_along_axis(cache.valid, idx, axis=2)      # [B,Hk,k]
+    if cache.quantized_kv:
+        k_sel = (k_sel.astype(jnp.float32)
+                 * jnp.take_along_axis(cache.kscale, idx, axis=2)[..., None])
+        v_sel = (v_sel.astype(jnp.float32)
+                 * jnp.take_along_axis(cache.vscale, idx, axis=2)[..., None])
+    q_g = q.reshape(b, hk, g, d).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bhkd->bhgk", q_g, k_sel.astype(jnp.float32))
+    logits = jnp.where(valid_sel[:, :, None, :], logits, NEG_INF)
+    probs = scoring.score_probs(logits.reshape(b, hq, k), head_dim_scale)
+    out = jnp.einsum("bhgk,bhkd->bhgd", probs.reshape(b, hk, g, k),
+                     v_sel.astype(jnp.float32))
+    return out.reshape(b, hq, -1), probs, valid_sel
+
+
+def _slot_axes(mesh, nb: int):
+    """Greedy prefix of (model, data, pod) whose sizes multiply to nb."""
+    axes, prod = [], 1
+    for a in ("model", "data", "pod"):
+        if a in mesh.shape and prod < nb:
+            axes.append(a)
+            prod *= mesh.shape[a]
+    return tuple(axes) if prod == nb else ()
+
+
+def _blocked_attend_shardmap(cache: KVCache, q: jax.Array,
+                             biased: jax.Array, prune: PruneConfig,
+                             mesh) -> jax.Array:
+    """Shard-local top-k + gather + flash-decode combine via shard_map.
+
+    The production path for slot-sharded caches: each model-shard races its
+    LOCAL slots (k/select_blocks winners), gathers locally, and only the
+    softmax stats + [B,Hq,dv] partial outputs cross the interconnect — the
+    distributed form of the paper's per-array CAM race. Requires
+    select_blocks == mesh model-axis size.
+    """
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    b, hq, d = q.shape
+    hk = cache.k.shape[1]
+    g = hq // hk
+    nb = prune.select_blocks
+    k_loc = prune.select_k // nb
+    slot_axes = _slot_axes(mesh, nb)
+    assert slot_axes, (dict(mesh.shape), nb)
+    red = slot_axes if len(slot_axes) > 1 else slot_axes[0]
+    batch_axes = tuple(a for a in ("pod", "data")
+                       if a in mesh.shape and a not in slot_axes
+                       and b % mesh.shape[a] == 0)
+    bspec = batch_axes if len(batch_axes) > 1 else (
+        batch_axes[0] if batch_axes else None)
+    sspec = slot_axes if len(slot_axes) > 1 else slot_axes[0]
+    quantized = cache.quantized_kv
+
+    def local_fn(q_l, k_l, v_l, ks_l, vs_l, valid_l, sc_l):
+        _, idx = jax.lax.top_k(sc_l, k_loc)
+        k_sel = jnp.take_along_axis(k_l, idx[..., None], axis=2)
+        v_sel = jnp.take_along_axis(v_l, idx[..., None], axis=2)
+        if quantized:
+            k_sel = (k_sel.astype(jnp.float32)
+                     * jnp.take_along_axis(ks_l, idx, axis=2)[..., None])
+            v_sel = (v_sel.astype(jnp.float32)
+                     * jnp.take_along_axis(vs_l, idx, axis=2)[..., None])
+        valid_sel = jnp.take_along_axis(valid_l, idx, axis=2)
+        q_g = q_l.reshape(-1, hk, g, d).astype(jnp.float32)
+        logits = jnp.einsum("bhgd,bhkd->bhgk", q_g,
+                            k_sel.astype(jnp.float32))
+        logits = logits / jnp.sqrt(jnp.float32(d))
+        logits = jnp.where(valid_sel[:, :, None, :], logits, NEG_INF)
+        m = jax.lax.pmax(jnp.max(logits, -1, keepdims=True), red)
+        e = jnp.exp(logits - m) * (logits > NEG_INF / 2)  # [b,Hk,g,k_loc]
+        z = jax.lax.psum(jnp.sum(e, axis=-1), red)        # [b,Hk,g]
+        o = jnp.einsum("bhgk,bhkd->bhgd", e, v_sel.astype(jnp.float32))
+        o = jax.lax.psum(o, red)
+        return o / jnp.maximum(z, 1e-30)[..., None]
+
+    dummy = jnp.zeros((), jnp.float32)
+    ks_in = cache.kscale if quantized else dummy
+    vs_in = cache.vscale if quantized else dummy
+    scalar = P()
+    out = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(bspec, None, None),                    # q
+                  P(bspec, None, sspec, None),             # k
+                  P(bspec, None, sspec, None),             # v
+                  P(bspec, None, sspec) if quantized else scalar,
+                  P(bspec, None, sspec) if quantized else scalar,
+                  P(bspec, None, sspec),                   # valid
+                  P(bspec, None, sspec)),                  # scores
+        out_specs=P(bspec, None, None, None),
+        check_vma=False,
+    )(q, cache.k, cache.v, ks_in, vs_in, cache.valid, biased)
+    return out.reshape(b, hq, -1)
+
+
+def decode_attention(cache: KVCache, q: jax.Array, k_new: jax.Array,
+                     v_new: jax.Array, prune: PruneConfig,
+                     ) -> Tuple[KVCache, jax.Array]:
+    """One decode step of UniCAIM (or baseline policy) attention.
+
+    q:     [B, Hq, d] current query (post-RoPE)
+    k_new: [B, Hk, d], v_new: [B, Hk, dv] current token (post-RoPE)
+    returns (updated cache, attention output [B, Hq, dv] f32).
+    """
+    head_dim = q.shape[-1]
+    cache = write_token(cache, k_new, v_new, prune)
+
+    if prune.policy in ("dense", "streaming"):
+        out, _ = _dense_attend(cache, q, head_dim)
+        return cache, out
+
+    if prune.policy == "h2o":
+        out, probs = _dense_attend(cache, q, head_dim)
+        acc = scoring.accumulate(cache.acc, probs, cache.k.shape[1],
+                                 prune.acc_decay)
+        return cache._replace(acc=acc), out
+
+    # ---- unicaim ----
+    b, hq, _ = q.shape
+    hk = cache.k.shape[1]
+    # CAM mode: approximate scores over the quantized mirror (in int8-KV
+    # mode the stored K itself is the mirror — no second copy)
+    qq, qs = quant.quantize_query(q, prune.query_bits)
+    mirror = cache.kq if cache.kq is not None else cache.k
+    s_approx = scoring.approx_scores(qq, qs, mirror, cache.kscale,
+                                     cache.valid)                  # [B,Hq,S]
+    grouped = topk.gqa_group_scores(s_approx, hk)                  # [B,Hk,S]
+    biased = topk.apply_selection_bias(
+        grouped, protected_mask(cache, prune), ~cache.valid)
+
+    if prune.select_mode == "threshold":
+        # CAM race semantics: masked exact attention, no gather
+        mask = topk.threshold_race(biased, prune.select_k,
+                                   prune.threshold_iters)          # [B,Hk,S]
+        g = hq // hk
+        mask_q = jnp.repeat(mask, g, axis=1) if g > 1 else mask
+        out, _ = _dense_attend(cache, q, head_dim, mask=mask_q)
+    elif prune.select_blocks > 1:
+        nb = prune.select_blocks
+        s = biased.shape[-1]
+        assert s % nb == 0 and prune.select_k % nb == 0, (s, prune.select_k)
+        from repro.runtime.sharding import active_mesh
+        mesh = active_mesh()
+        if mesh is not None and _slot_axes(mesh, nb):
+            # production path: shard_map keeps select+gather+attend local
+            out = _blocked_attend_shardmap(cache, q, biased, prune, mesh)
+        else:
+            k_loc = prune.select_k // nb
+            biased_b = shard(biased.reshape(b, hk, nb, s // nb),
+                             "batch", "kv_heads", "slots", None)
+            _, idx = topk.exact_topk(biased_b, k_loc)    # [B,Hk,nb,k_loc]
+            out = _gathered_attend_blocked(cache, q, idx, head_dim)
+    else:
+        _, idx = topk.exact_topk(biased, prune.select_k)           # [B,Hk,k]
+        out, _, _ = _gathered_attend(cache, q, idx, head_dim)
+
+    # charge-domain mode: same-cycle accumulation of approximate probs
+    if prune.accumulate == "approx":
+        probs_acc = scoring.score_probs(s_approx, head_dim)
+    else:  # 'exact' — full-precision probabilities (ablation)
+        s_exact = scoring.exact_scores(q, cache.k, cache.valid)
+        probs_acc = scoring.score_probs(s_exact, head_dim)
+    acc = scoring.accumulate(cache.acc, probs_acc, hk, prune.acc_decay)
+    return cache._replace(acc=acc), out
+
+
+# ---------------------------------------------------------------------------
+# Prefill: chunked causal attention + accumulated column scores
+# ---------------------------------------------------------------------------
+
+
+def chunked_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                             chunk: int = 512, obs_window: int = 0,
+                             scale: float = None,
+                             ) -> Tuple[jax.Array, jax.Array]:
+    """Causal attention over the full prompt, scanned over query chunks.
+
+    q: [B, Hq, N, d], k/v: [B, Hk, N, d] → (out [B, Hq, N, dv],
+    acc [B, Hk, N] column sums of attention probabilities).
+
+    obs_window > 0 restricts accumulation to the last `obs_window` query rows
+    (SnapKV-style); 0 accumulates over all rows (H2O-style, paper default).
+    Never materialises the N×N matrix — one [*, chunk, N] tile at a time.
+    """
+    b, hq, n, d = q.shape
+    hk = k.shape[1]
+    g = hq // hk
+    chunk = min(chunk, n)
+    n_real = n
+    pad = (-n) % chunk
+    if pad:
+        # pad rows/cols at the END: causal masking kills pad columns for
+        # every real row; pad-row outputs are sliced off below
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        n = n + pad
+    n_chunks = n // chunk
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    # K/V stay in their storage dtype (bf16 in production) — the MXU
+    # accumulates in f32 via preferred_element_type; re-reading full K/V per
+    # chunk at 2 bytes instead of 4 halves the dominant HBM term (§Perf)
+    q = q.astype(k.dtype)
+    q_chunks = q.reshape(b, hq, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    col = jnp.arange(n)
+
+    def body(acc, inp):
+        ci, q_c = inp                                              # [B,Hq,T,d]
+        row = ci * chunk + jnp.arange(chunk)
+        q_g = q_c.reshape(b, hk, g, chunk, d)
+        logits = jax.lax.dot_general(
+            q_g, k, dimension_numbers=(((4,), (3,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.float32)                    # [B,Hk,g,T,N]
+        logits = logits.reshape(b, hq, chunk, n)
+        causal = row[:, None] >= col[None, :]
+        logits = jnp.where(causal[None, None], logits * scale, NEG_INF)
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        e = jnp.exp(logits - m)
+        z = jnp.sum(e, axis=-1, keepdims=True)
+        probs = e / jnp.maximum(z, 1e-30)                          # [B,Hq,T,N]
+        p_g = probs.reshape(b, hk, g, chunk, n).astype(v.dtype)
+        out_c = jax.lax.dot_general(
+            p_g, v, dimension_numbers=(((4,), (2,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.float32)                    # [B,Hk,g,T,dv]
+        live = row < n_real                # exclude padded query rows
+        if obs_window > 0:
+            live = live & (row >= (n_real - obs_window))
+        w = jnp.where(live, 1.0, 0.0)[None, None, None, :, None]
+        acc = acc + jnp.sum(p_g.astype(jnp.float32) * w, axis=(2, 3))
+        return acc, out_c.reshape(b, hq, chunk, -1)
+
+    acc0 = jnp.zeros((b, hk, n), jnp.float32)
+    acc, outs = xscan(body, acc0, (jnp.arange(n_chunks), q_chunks))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(b, hq, n, -1)
+    return out[:, :, :n_real], acc[:, :, :n_real]

@@ -1,0 +1,223 @@
+"""UniCAIMCache — the fixed-slot KV cache with in-place overwrite (§III-B).
+
+The FeFET array holds S = H + M rows per kv-head; eviction never compacts,
+it re-programs one row (single WL write cycle). The TPU equivalent is a
+statically-shaped slot array written by scatter — jit/scan friendly, no
+re-layout, and shardable as [batch→data, kv_heads→model, slots→·].
+
+One instance per layer; models stack instances along a leading layer axis
+and scan over it.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import PruneConfig
+from repro.core import quant
+
+
+class KVCache(NamedTuple):
+    k: jax.Array                    # [B, Hk, S, dh] compute dtype or int8
+    v: Optional[jax.Array]          # [B, Hk, S, dv] (None for MLA latent)
+    kq: Optional[jax.Array]         # [B, Hk, S, dh] int8 mirror (CAM cells);
+                                    # None in int8 mode (k IS the mirror)
+    kscale: Optional[jax.Array]     # [B, Hk, S] f32 (mirror or int8-K scale)
+    vscale: Optional[jax.Array]     # [B, Hk, S] f32 (int8 mode only)
+    acc: jax.Array                  # [B, Hk, S] f32 accumulated scores
+    valid: jax.Array                # [B, Hk, S] bool
+    pos: jax.Array                  # [B, Hk, S] int32 (absolute; -1 empty)
+    fill: jax.Array                 # [B] int32 slots filled
+    step: jax.Array                 # [B] int32 tokens seen (next abs pos)
+
+    @property
+    def slots(self) -> int:
+        return self.k.shape[-2]
+
+    @property
+    def quantized_kv(self) -> bool:
+        return self.k.dtype == jnp.int8
+
+    def k_values(self) -> jax.Array:
+        """K rows in compute precision (dequantized in int8 mode)."""
+        if self.quantized_kv:
+            return quant.dequantize(self.k, self.kscale)
+        return self.k
+
+    def v_values(self) -> Optional[jax.Array]:
+        if self.v is not None and self.quantized_kv:
+            return quant.dequantize(self.v, self.vscale)
+        return self.v
+
+
+def init_cache(batch: int, n_kv_heads: int, head_dim: int, slots: int,
+               prune: PruneConfig, dtype=jnp.bfloat16,
+               v_dim: Optional[int] = None, latent: bool = False) -> KVCache:
+    """Empty cache. `latent=True` → MLA mode (no V, mirror over latent)."""
+    if v_dim is None:
+        v_dim = head_dim
+    shape = (batch, n_kv_heads, slots, head_dim)
+    int8_kv = prune.kv_dtype == "int8"
+    if int8_kv:
+        assert prune.policy == "unicaim", "int8 KV is a unicaim-mode knob"
+        dtype = jnp.int8
+    # int8 K doubles as the CAM mirror → no separate copy
+    needs_mirror = prune.policy == "unicaim" and not int8_kv
+    needs_scale = needs_mirror or int8_kv
+    return KVCache(
+        k=jnp.zeros(shape, dtype),
+        v=None if latent else jnp.zeros((batch, n_kv_heads, slots, v_dim),
+                                        dtype),
+        kq=jnp.zeros(shape, jnp.int8) if needs_mirror else None,
+        kscale=jnp.zeros(shape[:3], jnp.float32) if needs_scale else None,
+        vscale=(jnp.zeros(shape[:3], jnp.float32)
+                if int8_kv and not latent else None),
+        acc=jnp.zeros(shape[:3], jnp.float32),
+        valid=jnp.zeros(shape[:3], jnp.bool_),
+        pos=jnp.full(shape[:3], -1, jnp.int32),
+        fill=jnp.zeros((batch,), jnp.int32),
+        step=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def protected_mask(cache: KVCache, prune: PruneConfig) -> jax.Array:
+    """[B, Hk, S] — slots that must never be evicted (sinks + recent)."""
+    is_sink = (cache.pos >= 0) & (cache.pos < prune.sink_tokens)
+    recent_floor = cache.step[:, None, None] - prune.recent_window
+    is_recent = cache.pos >= recent_floor
+    return cache.valid & (is_sink | is_recent)
+
+
+def evictable_mask(cache: KVCache, prune: PruneConfig) -> jax.Array:
+    return cache.valid & ~protected_mask(cache, prune)
+
+
+def _choose_slot(cache: KVCache, prune: PruneConfig) -> jax.Array:
+    """Per-(B, Hk) write slot: append while space, else policy eviction."""
+    b, hk, s = cache.acc.shape
+    append = cache.fill[:, None]                                   # [B,1]
+    if prune.policy == "streaming":
+        # ring over the non-sink region (StreamingLLM)
+        window = s - prune.sink_tokens
+        ring = prune.sink_tokens + (cache.step[:, None] - prune.sink_tokens) % window
+        slot = jnp.where(cache.fill[:, None] < s, append, ring)
+        return jnp.broadcast_to(slot, (b, hk)).astype(jnp.int32)
+    # unicaim / h2o: argmin accumulated score among evictable slots
+    score = jnp.where(evictable_mask(cache, prune), cache.acc, jnp.inf)
+    evict = jnp.argmin(score, axis=-1)                             # [B,Hk]
+    full = cache.fill[:, None] >= s
+    return jnp.where(full, evict, jnp.broadcast_to(append, (b, hk))).astype(jnp.int32)
+
+
+def write_token(cache: KVCache, k_new: jax.Array,
+                v_new: Optional[jax.Array], prune: PruneConfig) -> KVCache:
+    """Insert one token (decode step): static eviction + in-place overwrite.
+
+    k_new: [B, Hk, dh]; v_new: [B, Hk, dv] or None (latent mode).
+    """
+    b, hk, s = cache.acc.shape
+    slot = _choose_slot(cache, prune)                              # [B,Hk]
+    bi = jnp.arange(b)[:, None]
+    hi = jnp.arange(hk)[None, :]
+
+    kq, kscale, vscale = cache.kq, cache.kscale, cache.vscale
+    if cache.quantized_kv:
+        kc, ks = quant.quantize(k_new, 8)
+        k = cache.k.at[bi, hi, slot].set(kc)
+        kscale = kscale.at[bi, hi, slot].set(ks)
+        v = cache.v
+        if v is not None:
+            vc, vs = quant.quantize(v_new, 8)
+            v = v.at[bi, hi, slot].set(vc)
+            vscale = vscale.at[bi, hi, slot].set(vs)
+    else:
+        k = cache.k.at[bi, hi, slot].set(k_new.astype(cache.k.dtype))
+        v = cache.v
+        if v is not None:
+            v = v.at[bi, hi, slot].set(v_new.astype(v.dtype))
+        if kq is not None:
+            qn, sn = quant.quantize(k_new, prune.score_bits)
+            kq = kq.at[bi, hi, slot].set(qn)
+            kscale = kscale.at[bi, hi, slot].set(sn)
+
+    if prune.init_new_score == "mean":
+        denom = jnp.maximum(jnp.sum(cache.valid, axis=-1), 1)
+        init = jnp.sum(jnp.where(cache.valid, cache.acc, 0.0), axis=-1) / denom
+    else:
+        init = jnp.zeros((b, hk), jnp.float32)
+    acc = cache.acc.at[bi, hi, slot].set(init)
+    valid = cache.valid.at[bi, hi, slot].set(True)
+    pos = cache.pos.at[bi, hi, slot].set(
+        jnp.broadcast_to(cache.step[:, None], (b, hk)))
+    return cache._replace(
+        k=k, v=v, kq=kq, kscale=kscale, vscale=vscale, acc=acc, valid=valid,
+        pos=pos, fill=jnp.minimum(cache.fill + 1, s), step=cache.step + 1)
+
+
+def prefill_fill(cache: KVCache, k_full: jax.Array,
+                 v_full: Optional[jax.Array], acc_scores: jax.Array,
+                 prune: PruneConfig) -> KVCache:
+    """One-shot static pruning after prefill (§III-A.1).
+
+    k_full: [B, Hk, N, dh] prompt keys; acc_scores: [B, Hk, N] accumulated
+    attention column-sums from the prefill pass. Keeps the `heavy_budget`
+    heaviest tokens per kv-head (sinks + recent always kept), scattered into
+    slots [0..H).  N >= heavy_budget is required (configs guarantee it);
+    if the policy is dense/streaming the first min(N, S) tokens are kept.
+    """
+    b, hk, n, dh = k_full.shape
+    s = cache.slots
+    keep = min(prune.heavy_budget, n, s)
+
+    pos_ids = jnp.arange(n)
+    if prune.policy in ("unicaim", "h2o"):
+        bias = jnp.where(pos_ids < prune.sink_tokens, jnp.inf, 0.0)
+        bias = bias + jnp.where(pos_ids >= n - prune.recent_window, jnp.inf, 0.0)
+        ranked = acc_scores + bias[None, None, :]
+    else:
+        # dense/streaming keep the most recent tokens (+ sinks for streaming)
+        ranked = pos_ids.astype(jnp.float32)[None, None, :] * jnp.ones((b, hk, 1))
+        if prune.policy == "streaming":
+            ranked = ranked + jnp.where(pos_ids < prune.sink_tokens,
+                                        jnp.inf, 0.0)[None, None, :]
+    _, idx = jax.lax.top_k(ranked, keep)                           # [B,Hk,keep]
+    idx = jnp.sort(idx, axis=-1)                                   # keep order
+
+    def gather(x):  # [B,Hk,N,*] → [B,Hk,keep,*]
+        return jnp.take_along_axis(x, idx[..., None], axis=2)
+
+    slot_pad = s - keep
+    kq, kscale, vscale = cache.kq, cache.kscale, cache.vscale
+    if cache.quantized_kv:
+        kc, ks = quant.quantize(gather(k_full), 8)
+        k = jnp.pad(kc, ((0, 0), (0, 0), (0, slot_pad), (0, 0)))
+        kscale = jnp.pad(ks, ((0, 0), (0, 0), (0, slot_pad)))
+        v = cache.v
+        if v is not None:
+            vc, vs = quant.quantize(gather(v_full), 8)
+            v = jnp.pad(vc, ((0, 0), (0, 0), (0, slot_pad), (0, 0)))
+            vscale = jnp.pad(vs, ((0, 0), (0, 0), (0, slot_pad)))
+    else:
+        k_sel = gather(k_full).astype(cache.k.dtype)
+        k = jnp.pad(k_sel, ((0, 0), (0, 0), (0, slot_pad), (0, 0)))
+        v = cache.v
+        if v is not None:
+            v_sel = gather(v_full).astype(v.dtype)
+            v = jnp.pad(v_sel, ((0, 0), (0, 0), (0, slot_pad), (0, 0)))
+        if kq is not None:
+            qn, sn = quant.quantize(k_sel, prune.score_bits)
+            kq = jnp.pad(qn, ((0, 0), (0, 0), (0, slot_pad), (0, 0)))
+            kscale = jnp.pad(sn, ((0, 0), (0, 0), (0, slot_pad)))
+
+    acc_sel = jnp.take_along_axis(acc_scores, idx, axis=2)
+    acc = jnp.pad(acc_sel.astype(jnp.float32), ((0, 0), (0, 0), (0, slot_pad)))
+    valid = jnp.pad(jnp.ones((b, hk, keep), jnp.bool_),
+                    ((0, 0), (0, 0), (0, slot_pad)))
+    pos = jnp.pad(idx.astype(jnp.int32), ((0, 0), (0, 0), (0, slot_pad)),
+                  constant_values=-1)
+    return cache._replace(
+        k=k, v=v, kq=kq, kscale=kscale, vscale=vscale, acc=acc, valid=valid,
+        pos=pos, fill=jnp.full((b,), keep, jnp.int32),
+        step=jnp.full((b,), n, jnp.int32))

@@ -1,0 +1,46 @@
+"""Prefill-stage one-shot static pruning pipeline (§III-A.1).
+
+Runs the chunked causal attention over the prompt, harvests the accumulated
+attention column sums, and fills the fixed-slot cache with the heavy tokens.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.configs.base import PruneConfig
+from repro.core.attention import chunked_causal_attention
+from repro.core.cache import KVCache, prefill_fill
+
+
+def prefill_and_prune(cache: KVCache, q: jax.Array, k: jax.Array,
+                      v: jax.Array, prune: PruneConfig,
+                      chunk: int = 512) -> Tuple[KVCache, jax.Array]:
+    """q: [B,Hq,N,d]; k/v: [B,Hk,N,d] → (pruned cache, prefill out)."""
+    out, acc = chunked_causal_attention(
+        q, k, v, chunk=chunk, obs_window=prune.prefill_obs_window)
+    cache = prefill_fill(cache, k, v, acc, prune)
+    return cache, out
+
+
+def memory_footprint_bytes(n_tokens: int, n_kv_heads: int, head_dim: int,
+                           prune: PruneConfig, kv_bytes: int = 2) -> int:
+    """Per-layer KV bytes under a policy (paper Fig. 10 'device count').
+
+    dense: grows with n_tokens; pruned policies: fixed S=H+M slots (+ the
+    quantized mirror for unicaim).
+    """
+    if prune.policy == "dense":
+        tokens = n_tokens
+        mirror = 0
+    else:
+        tokens = min(n_tokens, prune.slots)
+        mirror = 0
+        if prune.policy == "unicaim":
+            from repro.core.quant import mirror_bytes_per_token
+            mirror = tokens * n_kv_heads * mirror_bytes_per_token(
+                head_dim, prune.score_bits)
+    kv = 2 * tokens * n_kv_heads * head_dim * kv_bytes
+    acc_table = 0 if prune.policy == "dense" else tokens * n_kv_heads * 4
+    return kv + mirror + acc_table

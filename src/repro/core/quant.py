@@ -1,0 +1,109 @@
+"""Signed multibit quantization — the TPU analogue of UniCAIM's FeFET cell.
+
+The paper stores keys in 1–3-bit signed FeFET levels (Fig. 5/6) and encodes
+queries via "bitwise expansion" (Fig. 6c). On TPU this becomes symmetric
+signed integer quantization with a per-(token, head) scale:
+
+    q  = round(clip(x / s, -qmax, qmax)),   s = max|x| / qmax
+
+stored in an int8 container (optionally packed two-per-byte for 4-bit).
+1-bit degenerates to sign(x) with s = mean|x| (the paper's ±1 cell).
+
+All functions are shape-polymorphic over leading dims and quantize along the
+last axis (the head_dim a CAM row spans).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def qmax_for_bits(bits: int) -> int:
+    """Largest representable magnitude for `bits`-bit signed symmetric."""
+    if bits == 1:
+        return 1
+    return 2 ** (bits - 1) - 1
+
+
+def quantize(x: jax.Array, bits: int):
+    """Quantize along the last axis.
+
+    Returns (q: int8 of x.shape, scale: f32 of x.shape[:-1]) with
+    dequant(q, scale) ≈ x.
+    """
+    xf = x.astype(jnp.float32)
+    if bits == 1:
+        # paper's ±1 cell: complementary V_TH pair; scale = E|x| minimises L2
+        scale = jnp.mean(jnp.abs(xf), axis=-1)
+        q = jnp.where(xf >= 0, 1, -1).astype(jnp.int8)
+        return q, scale
+    qm = qmax_for_bits(bits)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = amax / qm
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(xf / safe[..., None]), -qm, qm).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def quantize_query(x: jax.Array, bits: int):
+    """Query-side 'bitwise expansion' (paper Fig. 6c) == signed quantization.
+
+    Kept as a distinct entry point because the paper drives queries onto
+    bit-lines with a different encoding than the stored keys; numerically it
+    is the same symmetric mapping.
+    """
+    return quantize(x, bits)
+
+
+# ---------------------------------------------------------------------------
+# int4 packing — the byte-accounting (and Pallas kernel) representation.
+# Two 4-bit codes per int8 byte; even index in the low nibble.
+# ---------------------------------------------------------------------------
+
+
+def pack_int4(q: jax.Array) -> jax.Array:
+    """Pack int8 codes in [-8, 7] along the last axis (must be even)."""
+    assert q.shape[-1] % 2 == 0, "pack_int4 needs an even last axis"
+    lo = q[..., 0::2].astype(jnp.uint8) & 0xF
+    hi = (q[..., 1::2].astype(jnp.uint8) & 0xF) << 4
+    return (lo | hi).astype(jnp.uint8)
+
+
+def unpack_int4(p: jax.Array) -> jax.Array:
+    """Inverse of pack_int4 → int8 codes with sign extension."""
+    lo = (p & 0xF).astype(jnp.int8)
+    hi = ((p >> 4) & 0xF).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*p.shape[:-1], p.shape[-1] * 2)
+
+
+def mirror_bytes_per_token(head_dim: int, bits: int) -> int:
+    """HBM bytes of the quantized key mirror per (token, kv-head), at the
+    production packing density (1-bit: 8/byte, 2-bit: 4/byte, 3-4 bit:
+    nibble-packed, 5-8 bit: int8). +4 bytes for the f32 scale. The CPU
+    reference cache stores an int8 container; pack_int4 provides the packed
+    layout the TPU kernels consume."""
+    if bits == 1:
+        return -(-head_dim // 8) + 4
+    if bits == 2:
+        return -(-head_dim // 4) + 4
+    if bits <= 4:
+        return head_dim // 2 + 4
+    return head_dim + 4
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def quantize_packed(x: jax.Array, bits: int):
+    """quantize + pack when bits<=4 (framework storage path)."""
+    q, s = quantize(x, bits)
+    if bits <= 4:
+        return pack_int4(q), s
+    return q, s

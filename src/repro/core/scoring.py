@@ -1,0 +1,85 @@
+"""Approximate similarity scoring — the CAM mode of UniCAIM (§III-B.3).
+
+The analog CAM evaluates q·Kᵀ over low-bit signed cells in one discharge;
+here the same contraction runs as an integer matmul over the quantized key
+mirror, producing scores for ALL slots at a fraction of the bf16 bytes:
+
+    score[b,h,s] = (Σ_d qq[b,h,d]·kq[b,h,s,d]) · qscale[b,h] · kscale[b,h,s]
+
+The charge-domain accumulation (§III-B.4) — C_SL charge-sharing onto C_Acc in
+the same cycle — becomes a fused update of the per-slot accumulated-score
+table with the softmax-normalised approximate probabilities.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.topk import NEG_INF
+
+
+def approx_scores(qq: jax.Array, qscale: jax.Array,
+                  kq: jax.Array, kscale: jax.Array,
+                  valid: jax.Array) -> jax.Array:
+    """Quantized approximate attention scores.
+
+    qq:     [B, Hq, d]     int8 quantized query (one decode step)
+    qscale: [B, Hq]        f32
+    kq:     [B, Hk, S, d]  int8 quantized key mirror
+    kscale: [B, Hk, S]     f32
+    valid:  [B, Hk, S]     bool
+    returns [B, Hq, S] f32 scores, NEG_INF at invalid slots.
+    """
+    b, hq, d = qq.shape
+    _, hk, s, _ = kq.shape
+    group = hq // hk
+    qq_g = qq.reshape(b, hk, group, d)
+    # integer contraction (MXU int8 path on TPU), then scale in f32
+    raw = jax.lax.dot_general(
+        qq_g.astype(jnp.int32), kq.astype(jnp.int32),
+        dimension_numbers=(((3,), (3,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.int32,
+    )  # [B, Hk, G, S]
+    scores = (raw.astype(jnp.float32)
+              * qscale.reshape(b, hk, group)[..., None]
+              * kscale[:, :, None, :])
+    scores = jnp.where(valid[:, :, None, :], scores, NEG_INF)
+    return scores.reshape(b, hq, s)
+
+
+def exact_scores(q: jax.Array, k: jax.Array, valid: jax.Array) -> jax.Array:
+    """Full-precision scores (H2O baseline / accuracy reference).
+
+    q: [B, Hq, d], k: [B, Hk, S, d], valid: [B, Hk, S] → [B, Hq, S].
+    """
+    b, hq, d = q.shape
+    _, hk, s, _ = k.shape
+    group = hq // hk
+    q_g = q.reshape(b, hk, group, d).astype(jnp.float32)
+    raw = jnp.einsum("bhgd,bhsd->bhgs", q_g, k.astype(jnp.float32))
+    raw = jnp.where(valid[:, :, None, :], raw, NEG_INF)
+    return raw.reshape(b, hq, s)
+
+
+def score_probs(scores: jax.Array, head_dim: int) -> jax.Array:
+    """Masked softmax over slots: scores [B, Hq, S] → probs [B, Hq, S]."""
+    logits = scores / jnp.sqrt(jnp.float32(head_dim))
+    logits = logits - jax.lax.stop_gradient(jnp.max(logits, axis=-1,
+                                                    keepdims=True))
+    e = jnp.exp(logits) * (scores > NEG_INF / 2)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    return e / jnp.maximum(z, 1e-30)
+
+
+def accumulate(acc: jax.Array, probs: jax.Array, n_kv_heads: int,
+               decay: float = 1.0) -> jax.Array:
+    """Charge-domain accumulation: fold this step's probabilities into the
+    per-(kv-head, slot) accumulated-score table.
+
+    acc:   [B, Hk, S] f32 running table
+    probs: [B, Hq, S] f32 this step's (approximate) attention probabilities
+    """
+    b, hq, s = probs.shape
+    group = hq // n_kv_heads
+    step = probs.reshape(b, n_kv_heads, group, s).sum(axis=2)
+    return acc * decay + step

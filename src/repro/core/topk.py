@@ -1,0 +1,78 @@
+"""Top-k selection — TPU analogues of UniCAIM's CAM-mode race (§III-B.3).
+
+Two selection mechanisms, both gated on the *approximate* scores:
+
+  * exact_topk        — `jax.lax.top_k`: returns exactly k indices, feeding
+                        the gather + exact-attention (current-domain) path.
+  * threshold_race    — the CAM discharge race: a fixed number of
+                        binary-search iterations on a score threshold so that
+                        ~k entries stay "charged"; returns a boolean mask
+                        (no sort, no gather — masked exact attention).
+
+The paper's race is O(1) in wall-clock because all sense lines discharge in
+parallel; on TPU both mechanisms are O(S) bandwidth on an [*, S] score tensor
+that was already produced by the scoring pass, i.e. they are roofline-free
+riders on the CAM-mode output (see DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def exact_topk(scores: jax.Array, k: int):
+    """lax.top_k over the last axis → (values, indices [..., k])."""
+    return jax.lax.top_k(scores, k)
+
+
+def threshold_race(scores: jax.Array, k: int, iters: int = 8) -> jax.Array:
+    """CAM-style selection: binary-search a threshold so ~k survive.
+
+    Mirrors the I_Ref = (k+1)·I_dyn comparator: each iteration checks how
+    many lines are still above threshold and tightens the reference.
+    Returns a boolean mask over the last axis with >= 1 and ~k True entries.
+    """
+    lo = jnp.min(scores, axis=-1, keepdims=True)
+    hi = jnp.max(scores, axis=-1, keepdims=True)
+
+    def body(_, lo_hi):
+        lo, hi = lo_hi
+        mid = 0.5 * (lo + hi)
+        count = jnp.sum(scores >= mid, axis=-1, keepdims=True)
+        # too many survivors -> raise threshold; too few -> lower it
+        lo = jnp.where(count > k, mid, lo)
+        hi = jnp.where(count > k, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    mask = scores >= lo
+    # guarantee at least one survivor (the max always survives)
+    top = scores >= jnp.max(scores, axis=-1, keepdims=True)
+    return mask | top
+
+
+def gqa_group_scores(scores: jax.Array, n_kv_heads: int) -> jax.Array:
+    """Sum per-q-head scores within each GQA group → per-kv-head scores.
+
+    scores: [..., Hq, S] → [..., Hk, S].  This is what the shared sense line
+    per CAM row computes physically when a kv head serves a whole group.
+    """
+    *lead, hq, s = scores.shape
+    assert hq % n_kv_heads == 0
+    g = hq // n_kv_heads
+    return scores.reshape(*lead, n_kv_heads, g, s).sum(axis=-2)
+
+
+def apply_selection_bias(scores: jax.Array, protected: jax.Array,
+                         invalid: jax.Array) -> jax.Array:
+    """Protected slots always win the race; invalid slots never do."""
+    scores = jnp.where(protected, jnp.float32(1e30), scores)
+    return jnp.where(invalid, jnp.float32(NEG_INF), scores)
+
+
+def indices_to_mask(indices: jax.Array, size: int) -> jax.Array:
+    """[..., k] int indices → [..., size] boolean membership mask."""
+    onehot = jax.nn.one_hot(indices, size, dtype=jnp.bool_)
+    return jnp.any(onehot, axis=-2)

@@ -1,0 +1,118 @@
+"""Pallas TPU kernel — CAM-mode approximate scoring (UniCAIM §III-B.3).
+
+Computes quantized attention scores for ALL cache slots from the int8 key
+mirror. This is the kernel that realises the paper's "O(1) associative
+search" as a bandwidth statement on TPU: it reads `S·d` int8 bytes (the
+mirror) instead of `S·d·2` bf16 bytes, and runs the contraction on the MXU.
+
+Layout (heads collapsed): one grid cell scores one kv-head's slot block
+against its whole GQA query group.
+
+  qq     [BH, G, d]   int8   quantized queries (group of G q-heads)
+  qscale [BH, G]      f32
+  kq     [BH, S, d]   int8   quantized key mirror
+  kscale [BH, S]      f32
+  valid  [BH, S]      bool (passed as int8 mask)
+  out    [BH, G, S]   f32    scores; NEG_INF at invalid slots
+
+Block over S (block_s slots per grid step); d and G live fully in VMEM:
+VMEM per step ≈ block_s·d (int8) + G·d + 2·block_s·4 ≈ 64KB @ (512, 128).
+MXU alignment: d is a multiple of 128 for every assigned arch; G is padded
+to the sublane count by Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _approx_score_kernel(qq_ref, qs_ref, kq_ref, ks_ref, valid_ref, out_ref):
+    q = qq_ref[0].astype(jnp.float32)                      # [G, d]
+    k = kq_ref[0].astype(jnp.float32)                      # [Bs, d]
+    raw = jax.lax.dot_general(
+        q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                # [G, Bs]
+    sc = raw * qs_ref[0][:, None] * ks_ref[0][None, :]
+    ok = valid_ref[0][None, :] != 0
+    out_ref[0] = jnp.where(ok, sc, NEG_INF)
+
+
+def _approx_score_packed_kernel(qq_ref, qs_ref, kq_ref, ks_ref, valid_ref,
+                                out_ref):
+    """Packed-nibble variant: unpacks two 4-bit signed codes per byte in
+    VMEM — the mirror read from HBM is d/2 bytes per slot (the paper's
+    multilevel-cell density made real on TPU)."""
+    q = qq_ref[0].astype(jnp.float32)                      # [G, d]
+    packed = kq_ref[0]                                     # [Bs, d//2] uint8
+    lo = (packed & 0xF).astype(jnp.int8)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    k = jnp.stack([lo, hi], axis=-1).reshape(
+        packed.shape[0], packed.shape[1] * 2).astype(jnp.float32)
+    raw = jax.lax.dot_general(
+        q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                # [G, Bs]
+    sc = raw * qs_ref[0][:, None] * ks_ref[0][None, :]
+    ok = valid_ref[0][None, :] != 0
+    out_ref[0] = jnp.where(ok, sc, NEG_INF)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def approx_score_packed(qq: jax.Array, qscale: jax.Array, kq_packed: jax.Array,
+                        kscale: jax.Array, valid: jax.Array,
+                        block_s: int = 512, interpret: bool = False
+                        ) -> jax.Array:
+    """CAM scoring over an int4-PACKED mirror. kq_packed: [BH, S, d//2]."""
+    bh, g, d = qq.shape
+    _, s, half = kq_packed.shape
+    assert half * 2 == d
+    block_s = min(block_s, s)
+    assert s % block_s == 0
+    grid = (bh, s // block_s)
+    return pl.pallas_call(
+        _approx_score_packed_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, g), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_s, half), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_s), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_s), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, g, block_s), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((bh, g, s), jnp.float32),
+        interpret=interpret,
+    )(qq, qscale.astype(jnp.float32), kq_packed,
+      kscale.astype(jnp.float32), valid.astype(jnp.int8))
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def approx_score(qq: jax.Array, qscale: jax.Array, kq: jax.Array,
+                 kscale: jax.Array, valid: jax.Array,
+                 block_s: int = 512, interpret: bool = False) -> jax.Array:
+    bh, g, d = qq.shape
+    _, s, _ = kq.shape
+    block_s = min(block_s, s)
+    assert s % block_s == 0, f"slots {s} % block {block_s} != 0"
+    grid = (bh, s // block_s)
+    return pl.pallas_call(
+        _approx_score_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, g), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_s, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_s), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_s), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, g, block_s), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((bh, g, s), jnp.float32),
+        interpret=interpret,
+    )(qq, qscale.astype(jnp.float32), kq, kscale.astype(jnp.float32),
+      valid.astype(jnp.int8))

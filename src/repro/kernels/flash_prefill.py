@@ -1,0 +1,137 @@
+"""Pallas TPU kernel — prefill flash attention WITH accumulated column
+scores (UniCAIM §III-A.1 statistics harvested in-kernel).
+
+Standard causal flash attention forward, plus a second sweep over the key
+blocks that re-materialises the (now exactly normalised) probabilities and
+accumulates their column sums — the statistic the one-shot static pruning
+ranks tokens by. The second sweep doubles the score matmuls but keeps the
+whole statistic on-chip: no [N, N] matrix, no extra HBM round-trip (the
+XLA fallback pays that round-trip; see EXPERIMENTS.md §Perf).
+
+  q   [BH, N, d]  per-q-head queries (BH = B·Hq)
+  k   [BK, N, d]  per-kv-head keys   (BK = B·Hk; index map shares a kv head
+  v   [BK, N, d]   across its GQA group, no expansion copy)
+  out [BH, N, d]  attention output
+  acc [BH, N] f32 column sums of attention probabilities (group-sum outside)
+
+Grid: (BH, Q_blocks, 2·K_blocks) — kb < K_blocks: flash pass;
+kb >= K_blocks: column-accumulation pass using the finalised (m, l).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_prefill_kernel(q_ref, k_ref, v_ref, out_ref, acc_ref,
+                          m_ref, l_ref, o_ref, col_ref,
+                          *, scale, block_q, block_k, nkb, nqb, n):
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+    kk = jax.lax.rem(kb, nkb)
+    phase2 = kb >= nkb
+
+    @pl.when((qb == 0) & (kb == 0))
+    def _zero_cols():
+        col_ref[...] = jnp.zeros_like(col_ref)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    row0 = qb * block_q
+    col0 = kk * block_k
+    # causal: the whole block is masked iff its first column exceeds the
+    # last row — skip both passes there.
+    live = col0 <= row0 + block_q - 1
+
+    @pl.when(live)
+    def _work():
+        q = q_ref[0].astype(jnp.float32)                   # [Tq, d]
+        k = k_ref[0].astype(jnp.float32)                   # [Tk, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        rows = row0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = col0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(rows >= cols, s, NEG_INF)
+
+        @pl.when(~phase2)
+        def _flash():
+            v = v_ref[0].astype(jnp.float32)               # [Tk, d]
+            m_prev = m_ref[...]
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+            corr = jnp.exp(m_prev - m_new)
+            p = jnp.exp(s - m_new)
+            l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+            o_ref[...] = o_ref[...] * corr + jax.lax.dot(
+                p, v, preferred_element_type=jnp.float32)
+            m_ref[...] = m_new
+
+        @pl.when(phase2)
+        def _cols():
+            # exact normalised probabilities with the finalised stats
+            p = jnp.exp(s - m_ref[...]) / jnp.maximum(l_ref[...], 1e-30)
+            colsum = jnp.sum(p, axis=0)                    # [Tk]
+            cur = col_ref[0, pl.ds(col0, block_k)]
+            col_ref[0, pl.ds(col0, block_k)] = cur + colsum
+
+    @pl.when(kb == nkb - 1)
+    def _flush_out():
+        out_ref[0] = (o_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-30)).astype(out_ref.dtype)
+
+    @pl.when((qb == nqb - 1) & (kb == 2 * nkb - 1))
+    def _flush_acc():
+        acc_ref[0] = col_ref[0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("group", "block_q", "block_k",
+                                    "interpret"))
+def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array, group: int = 1,
+                  block_q: int = 256, block_k: int = 256,
+                  interpret: bool = False):
+    """Returns (out [BH,N,d], acc [BH,N] f32). k/v have BH//group rows."""
+    bh, n, d = q.shape
+    block_q = min(block_q, n)
+    block_k = min(block_k, n)
+    assert n % block_q == 0 and n % block_k == 0
+    nqb, nkb = n // block_q, n // block_k
+    kernel = functools.partial(
+        _flash_prefill_kernel, scale=1.0 / (d ** 0.5),
+        block_q=block_q, block_k=block_k, nkb=nkb, nqb=nqb, n=n)
+    g = group
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nqb, 2 * nkb),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda i, qb, kb: (i, qb, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda i, qb, kb: (i // g, jax.lax.rem(kb, nkb), 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda i, qb, kb: (i // g, jax.lax.rem(kb, nkb), 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, d), lambda i, qb, kb: (i, qb, 0)),
+            pl.BlockSpec((1, n), lambda i, qb, kb: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, n, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, n), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((1, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

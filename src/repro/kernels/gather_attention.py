@@ -1,0 +1,86 @@
+"""Pallas TPU kernel — current-domain exact attention over gathered top-k
+slots (UniCAIM §III-B.5).
+
+After dynamic selection, only k ≪ S rows of K/V are touched. The XLA gather
+lands them contiguously; this kernel then runs the exact softmax·V entirely
+in VMEM with a flash-style online softmax over k blocks, so arbitrary
+select_k values stream without spilling.
+
+  q     [BH, G, d]    query group (one decode step)
+  k     [BH, K, d]    gathered keys
+  v     [BH, K, dv]   gathered values
+  valid [BH, K]       int8 mask (gathered slot validity)
+  out   [BH, G, dv]   f32
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _gather_attn_kernel(q_ref, k_ref, v_ref, valid_ref, out_ref,
+                        m_ref, l_ref, o_ref, *, scale, nkb):
+    kb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[0].astype(jnp.float32)                      # [G, d]
+    k = k_ref[0].astype(jnp.float32)                      # [Bk, d]
+    v = v_ref[0].astype(jnp.float32)                      # [Bk, dv]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid_ref[0][None, :] != 0, s, NEG_INF)
+
+    m_prev = m_ref[...]                                   # [G, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                                # [G, Bk]
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = o_ref[...] * corr + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kb == nkb - 1)
+    def _flush():
+        out_ref[0] = o_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def gather_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     valid: jax.Array, block_k: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    bh, g, d = q.shape
+    _, kk, dv = v.shape
+    block_k = min(block_k, kk)
+    assert kk % block_k == 0, f"k {kk} % block {block_k} != 0"
+    nkb = kk // block_k
+    kernel = functools.partial(_gather_attn_kernel,
+                               scale=1.0 / (d ** 0.5), nkb=nkb)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nkb),
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, block_k, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_k, dv), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_k), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, g, dv), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, g, dv), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, valid.astype(jnp.int8))

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def approx_score_ref(qq, qscale, kq, kscale, valid):
+    """[BH,G,d] int8, [BH,G], [BH,S,d] int8, [BH,S], [BH,S] → [BH,G,S]."""
+    raw = jnp.einsum("bgd,bsd->bgs", qq.astype(jnp.int32),
+                     kq.astype(jnp.int32)).astype(jnp.float32)
+    sc = raw * qscale.astype(jnp.float32)[..., None] \
+             * kscale.astype(jnp.float32)[:, None, :]
+    return jnp.where(valid[:, None, :] != 0, sc, NEG_INF)
+
+
+def gather_attention_ref(q, k, v, valid):
+    """[BH,G,d], [BH,K,d], [BH,K,dv], [BH,K] → [BH,G,dv] f32."""
+    d = q.shape[-1]
+    s = jnp.einsum("bgd,bkd->bgk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(float(d))
+    s = jnp.where(valid[:, None, :] != 0, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bgk,bkd->bgd", p, v.astype(jnp.float32))
+
+
+def flash_prefill_ref(q, k, v, group=1):
+    """[BH,N,d], [BK,N,d], [BK,N,d] → (out [BH,N,d], acc [BH,N] f32)."""
+    bh, n, d = q.shape
+    kx = jnp.repeat(k, group, axis=0)
+    vx = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) / jnp.sqrt(float(d))
+    mask = jnp.tril(jnp.ones((n, n), bool))
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bts,bsd->btd", p, vx.astype(jnp.float32))
+    return out.astype(q.dtype), jnp.sum(p, axis=1)
+
+
+def approx_score_packed_ref(qq, qscale, kq_packed, kscale, valid):
+    """Oracle for the packed-nibble kernel: unpack then score."""
+    from repro.core.quant import unpack_int4
+    return approx_score_ref(qq, qscale, unpack_int4(kq_packed), kscale,
+                            valid)

@@ -1,0 +1,352 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+#
+# Multi-pod dry-run (EXPERIMENTS.md §Dry-run): for every assigned
+# (architecture × input shape) cell, lower + compile the production step
+# function on the 16×16 single-pod mesh AND the 2×16×16 multi-pod mesh,
+# then record memory_analysis / cost_analysis / collective bytes for the
+# roofline (launch/roofline.py). ShapeDtypeStruct inputs — no allocation.
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs.base import (PruneConfig, ShapeConfig, SHAPES,  # noqa: E402
+                                SHAPES_BY_NAME, get_config, list_archs)
+from repro.launch import roofline  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.train import make_train_step, TrainState  # noqa: E402
+from repro.models.transformer import Model  # noqa: E402
+from repro.optim import adamw  # noqa: E402
+from repro.runtime.flags import unroll_scans  # noqa: E402
+from repro.runtime.sharding import (decode_state_pspecs, named_sharding,  # noqa: E402
+                                    params_pspecs, use_mesh)
+
+ARCHS = [
+    "whisper-base", "minitron-8b", "starcoder2-3b", "phi3-medium-14b",
+    "granite-3-2b", "deepseek-v3-671b", "grok-1-314b", "zamba2-7b",
+    "mamba2-1.3b", "llava-next-mistral-7b",
+]
+
+# archs whose bf16 params exceed ~8 GB/chip under TP-16 alone → keep ZeRO
+# (fsdp) sharding even for inference cells (per-layer all-gather).
+_BIG = {"deepseek-v3-671b", "grok-1-314b"}
+
+
+def cell_notes(arch: str, shape: ShapeConfig) -> str:
+    notes = []
+    cfg = get_config(arch)
+    if cfg.family == "ssm":
+        notes.append("UniCAIM inapplicable (no KV cache); native O(1)-state "
+                     "decode — see DESIGN.md §Arch-applicability")
+    if cfg.family == "hybrid":
+        notes.append("UniCAIM applies to the shared-attention caches only")
+    if shape.name == "long_500k" and cfg.has_attention:
+        notes.append("500k decode runs WITH UniCAIM dynamic pruning (dense "
+                     "full-attention variant skipped as intractable — the "
+                     "technique is what makes this cell feasible)")
+    if arch == "whisper-base" and shape.kind != "train":
+        notes.append("decoder stress config (real model ctx=448); "
+                     "conv frontend stubbed to frame embeddings")
+    return "; ".join(notes)
+
+
+def make_prune(shape: ShapeConfig, policy: str = "unicaim",
+               opts=()) -> PruneConfig:
+    blocks = 1
+    kv_dtype = "bf16"
+    for o in opts:
+        if o.startswith("blocks"):
+            blocks = int(o[6:])
+        if o == "kvint8":
+            kv_dtype = "int8"
+    if shape.kind == "decode":
+        slots = shape.seq_len
+        return PruneConfig(
+            policy=policy, heavy_budget=slots - 64, reserve=64,
+            sink_tokens=4, recent_window=64,
+            select_k=min(2048, slots // 16), score_bits=3, query_bits=4,
+            select_blocks=blocks, kv_dtype=kv_dtype)
+    if shape.kind == "prefill":
+        heavy = max(shape.seq_len // 8, 512)
+        return PruneConfig(policy=policy, heavy_budget=heavy, reserve=64,
+                           sink_tokens=4, recent_window=64,
+                           select_k=min(1024, heavy // 4))
+    return PruneConfig(policy=policy)        # train: cache-free
+
+
+def cost_basis(cfg):
+    """(make(counts)→cfg, full_counts): layer-count knobs whose HLO cost is
+    affine — the dry-run probes shallow unrolled variants and extrapolates,
+    because XLA cost_analysis counts a while-loop body once regardless of
+    trip count (see runtime/flags.py)."""
+    if cfg.family == "mla_moe":
+        full = {"dense": cfg.moe.dense_first_k,
+                "moe": cfg.num_layers - cfg.moe.dense_first_k}
+
+        def make(c):
+            return dataclasses.replace(
+                cfg, num_layers=c["dense"] + c["moe"],
+                moe=dataclasses.replace(cfg.moe, dense_first_k=c["dense"]))
+    elif cfg.family == "encdec":
+        full = {"enc": cfg.enc_layers, "dec": cfg.dec_layers}
+
+        def make(c):
+            return dataclasses.replace(cfg, enc_layers=c["enc"],
+                                       dec_layers=c["dec"])
+    elif cfg.family == "hybrid":
+        period = cfg.attn_period
+        full = {"group": cfg.num_layers // period,
+                "tail": cfg.num_layers % period}
+
+        def make(c):
+            return dataclasses.replace(
+                cfg, num_layers=c["group"] * period + c["tail"])
+        if full["tail"] == 0:
+            full.pop("tail")
+    else:
+        full = {"layers": cfg.num_layers}
+
+        def make(c):
+            return dataclasses.replace(cfg, num_layers=c["layers"])
+    return make, full
+
+
+def build_cell(cfg, shape: ShapeConfig, policy: str = "unicaim",
+               remat: bool = True, opts=()):
+    """Returns (fn, arg_shapes tuple, arg_shardings tuple, donate).
+    opts: optimization variants — 'blocksN' (shard-local selection),
+    'rematdots', 'losschunkN' (chunked CE)."""
+    prune = make_prune(shape, policy, opts)
+    remat_policy = "dots" if "rematdots" in opts else "nothing"
+    loss_chunk = 0
+    for o in opts:
+        if o.startswith("losschunk"):
+            loss_chunk = int(o[9:])
+        if o.startswith("chunk") and not o.startswith("chunkmirror"):
+            cfg = dataclasses.replace(cfg, attn_chunk=int(o[5:]))
+        if o == "moeep":
+            cfg = dataclasses.replace(cfg, moe_ep=True)
+    b = shape.global_batch
+    key = jax.random.PRNGKey(0)
+
+    def batch_shapes(t):
+        bs = {"tokens": jax.ShapeDtypeStruct((b, t), jnp.int32)}
+        if cfg.family == "encdec":
+            bs["enc_embed"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_len, cfg.d_model), jnp.bfloat16)
+        elif cfg.frontend != "none":
+            bs[f"{cfg.frontend}_embed"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_len, cfg.d_model), jnp.bfloat16)
+        return bs
+
+    def batch_shardings(bs):
+        return {k: named_sharding(("batch",) + (None,) * (v.ndim - 1),
+                                  v.shape) for k, v in bs.items()}
+
+    if shape.kind == "train":
+        model = Model(cfg, prune, remat=remat, remat_policy=remat_policy)
+        opt_cfg = adamw.AdamWConfig(
+            quantized_state=cfg.param_count() > 2e10)
+        p_shapes = jax.eval_shape(model.init, key)
+        opt_shapes = jax.eval_shape(
+            lambda p: adamw.init(p, opt_cfg), p_shapes)
+        st_shapes = TrainState(params=p_shapes, opt=opt_shapes,
+                               step=jax.ShapeDtypeStruct((), jnp.int32))
+        bs = batch_shapes(shape.seq_len)
+        st_specs = params_pspecs(st_shapes)
+        st_sh = jax.tree.map(lambda s: NamedSharding(_MESH[0], s), st_specs,
+                             is_leaf=lambda x: isinstance(x, P))
+        fn = make_train_step(model, opt_cfg, total_steps=10000,
+                             loss_chunk=loss_chunk)
+        return fn, (st_shapes, bs), (st_sh, batch_shardings(bs)), (0,)
+
+    if shape.kind == "prefill":
+        model = Model(cfg, prune, remat=False)
+        p_shapes = jax.eval_shape(model.init, key)
+        p_specs = params_pspecs(p_shapes)
+        p_sh = jax.tree.map(lambda s: NamedSharding(_MESH[0], s), p_specs,
+                            is_leaf=lambda x: isinstance(x, P))
+        bs = batch_shapes(shape.seq_len)
+        fn = model.prefill
+        return fn, (p_shapes, bs), (p_sh, batch_shardings(bs)), ()
+
+    # decode: one new token against a cache of seq_len slots
+    model = Model(cfg, prune, remat=False, decode_slots=shape.seq_len)
+    p_shapes = jax.eval_shape(model.init, key)
+    p_specs = params_pspecs(p_shapes)
+    p_sh = jax.tree.map(lambda s: NamedSharding(_MESH[0], s), p_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+    cross = cfg.frontend_len if cfg.family == "encdec" else 0
+    st_shapes = jax.eval_shape(
+        lambda: model.init_decode_state(b, cross_len=cross))
+    st_specs = decode_state_pspecs(st_shapes)
+    st_sh = jax.tree.map(lambda s: NamedSharding(_MESH[0], s), st_specs,
+                         is_leaf=lambda x: isinstance(x, P))
+    tok = jax.ShapeDtypeStruct((b,), jnp.int32)
+    tok_sh = named_sharding(("batch",), tok.shape)
+    fn = model.decode_step
+    return fn, (p_shapes, st_shapes, tok), (p_sh, st_sh, tok_sh), (1,)
+
+
+_MESH = [None]   # active mesh holder for build_cell's sharding closures
+
+
+def _compile_cell(cfg, shape, policy, remat, opts=()):
+    fn, arg_shapes, arg_sh, donate = build_cell(cfg, shape, policy, remat,
+                                                opts)
+    jitted = jax.jit(fn, in_shardings=arg_sh, donate_argnums=donate)
+    return jitted.lower(*arg_shapes).compile()
+
+
+def _metrics(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    coll = roofline.parse_collective_bytes(compiled.as_text())
+    m = {"flops": float(cost.get("flops", 0.0)),
+         "bytes_accessed": float(cost.get("bytes accessed", 0.0))}
+    for k, v in coll.items():
+        m[f"coll_{k}"] = float(v)
+    return m
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             policy: str = "unicaim", remat: bool = True,
+             probes: bool = True, opts=()) -> dict:
+    shape = SHAPES_BY_NAME[shape_name]
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    _MESH[0] = mesh
+    overrides = {}
+    if shape.kind != "train" and arch not in _BIG:
+        overrides["fsdp"] = ()          # inference: TP-only params
+    t0 = time.time()
+    with use_mesh(mesh, **overrides):
+        # 1) full-depth scanned compile: the multi-pod PROOF + memory budget
+        compiled = _compile_cell(cfg, shape, policy, remat, opts)
+        t_compile = time.time() - t0
+
+        # 2) shallow UNROLLED probes → exact per-layer cost extrapolation.
+        # Base point is 2 layers/segment: 1-layer programs take different
+        # fusion paths and break affinity (observed on whisper-base);
+        # 2 ↔ 3 is cleanly affine.
+        make, full = cost_basis(cfg)
+        base = {k: 2 for k in full}
+        probe_cost = {}
+        if probes:
+            with unroll_scans(True):
+                probe_cost["base"] = _metrics(
+                    _compile_cell(make(base), shape, policy, remat, opts))
+                for dim in full:
+                    pt = dict(base)
+                    pt[dim] = 3
+                    probe_cost[dim] = _metrics(
+                        _compile_cell(make(pt), shape, policy, remat, opts))
+        t_probe = time.time() - t0 - t_compile
+
+    mem = compiled.memory_analysis()
+    if probes:
+        keys = probe_cost["base"].keys()
+        per_dim = {dim: {k: probe_cost[dim][k] - probe_cost["base"][k]
+                         for k in keys} for dim in full}
+        totals = {}
+        for k in keys:
+            c0 = probe_cost["base"][k] - sum(base[d] * per_dim[d][k]
+                                             for d in full)
+            totals[k] = max(0.0, c0 + sum(full[d] * per_dim[d][k]
+                                          for d in full))
+    else:
+        totals = _metrics(compiled)
+
+    n_dev = mesh.devices.size
+    rec = {
+        "arch": arch, "shape": shape_name, "policy": policy,
+        "opts": list(opts),
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": int(n_dev),
+        "kind": shape.kind,
+        "flops": totals["flops"],
+        "bytes_accessed": totals["bytes_accessed"],
+        "collective_bytes": totals["coll_total"],
+        "collectives": {k[5:]: v for k, v in totals.items()
+                        if k.startswith("coll_")},
+        "arg_bytes_per_dev": int(mem.argument_size_in_bytes),
+        "temp_bytes_per_dev": int(mem.temp_size_in_bytes),
+        "peak_bytes_per_dev": int(mem.peak_memory_in_bytes),
+        "output_bytes_per_dev": int(mem.output_size_in_bytes),
+        "model_flops": roofline.model_flops(cfg, shape),
+        "param_count": int(cfg.param_count()),
+        "active_param_count": int(cfg.active_param_count()),
+        "compile_s": round(t_compile, 2), "probe_s": round(t_probe, 2),
+        "notes": cell_notes(arch, shape),
+    }
+    rec.update({k: v for k, v in roofline.summarize(rec).items()
+                if k not in rec})
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--policy", default="unicaim")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--opt", default="",
+                    help="comma list: blocksN,rematdots,losschunkN")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = ARCHS if args.arch == "all" else args.arch.split(",")
+    shapes = [s.name for s in SHAPES] if args.shape == "all" \
+        else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}_{shape}_{'multi' if mp else 'single'}"
+                if args.policy != "unicaim":
+                    tag += f"_{args.policy}"
+                opts = tuple(o for o in args.opt.split(",") if o)
+                for o in opts:
+                    tag += f"_{o}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip] {tag}")
+                    continue
+                print(f"[run ] {tag} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape, mp, args.policy,
+                                   remat=not args.no_remat, opts=opts)
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    print(f"[ ok ] {tag}: flops/dev={rec['flops']:.3e} "
+                          f"bytes/dev={rec['bytes_accessed']:.3e} "
+                          f"coll/dev={rec['collective_bytes']:.3e} "
+                          f"peak={rec['peak_bytes_per_dev']/2**30:.2f}GiB "
+                          f"dom={rec['dominant']} "
+                          f"compile={rec['compile_s']:.1f}s", flush=True)
+                except Exception as e:
+                    failures.append((tag, repr(e)))
+                    print(f"[FAIL] {tag}: {e}")
+                    traceback.print_exc()
+    print(f"\n{len(failures)} failures")
+    for tag, err in failures:
+        print(" ", tag, err[:200])
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

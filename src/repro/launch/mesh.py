@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist right now (tests / smoke runs)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+def make_elastic_mesh(n_devices: int | None = None):
+    """Rebuild a (data, model) mesh for the CURRENT device count — the
+    elastic-scaling entry point after a topology change."""
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    model = 1
+    for cand in (16, 8, 4, 2, 1):
+        if n % cand == 0:
+            model = cand
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"),
+                         devices=devs[:n])

@@ -1,0 +1,121 @@
+"""Render the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+experiments/dryrun/*.json records."""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ARCH_ORDER = [
+    "whisper-base", "minitron-8b", "starcoder2-3b", "phi3-medium-14b",
+    "granite-3-2b", "deepseek-v3-671b", "grok-1-314b", "zamba2-7b",
+    "mamba2-1.3b", "llava-next-mistral-7b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dirpath: str):
+    recs = {}
+    for f in glob.glob(os.path.join(dirpath, "*.json")):
+        r = json.load(open(f))
+        key = (r["arch"], r["shape"], r["mesh"], r.get("policy", "unicaim"))
+        recs[key] = r
+    return recs
+
+
+def fmt_b(x):
+    for unit, div in (("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= div:
+            return f"{x / div:.2f}{unit}"
+    return f"{x:.0f}B"
+
+
+def fmt_t(x):
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}µs"
+
+
+def dryrun_table(recs, mesh="16x16", policy="unicaim"):
+    lines = [
+        "| arch | shape | peak/dev | args/dev | flops/dev | HBM bytes/dev |"
+        " coll bytes/dev | collective mix | compile |",
+        "|---|---|---|---|---|---|---|---|---|".replace("|---|---|---|---|"
+                                                         "---|---|---|---|---|",
+                                                         "|---|---|---|---|---|---|---|---|"),
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, mesh, policy))
+            if not r:
+                continue
+            mix = ",".join(f"{k[:2]}:{fmt_b(v)}"
+                           for k, v in sorted(r["collectives"].items())
+                           if k != "total" and v > 0)
+            lines.append(
+                f"| {arch} | {shape} | "
+                f"{r['peak_bytes_per_dev'] / 2**30:.2f}GiB | "
+                f"{r['arg_bytes_per_dev'] / 2**30:.2f}GiB | "
+                f"{r['flops']:.2e} | {fmt_b(r['bytes_accessed'])} | "
+                f"{fmt_b(r['collective_bytes'])} | {mix} | "
+                f"{r['compile_s']:.0f}s |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs, mesh="16x16", policy="unicaim"):
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "bound/step | MODEL_FLOPS | useful ratio | MFU bound |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, mesh, policy))
+            if not r:
+                continue
+            lines.append(
+                f"| {arch} | {shape} | {fmt_t(r['compute_s'])} | "
+                f"{fmt_t(r['memory_s'])} | {fmt_t(r['collective_s'])} | "
+                f"**{r['dominant'].replace('_s', '')}** | "
+                f"{fmt_t(r['step_time_bound_s'])} | "
+                f"{r['model_flops']:.2e} | {r['useful_flops_ratio']:.3f} | "
+                f"{r['mfu_bound'] * 100:.1f}% |")
+    return "\n".join(lines)
+
+
+def notes_list(recs, mesh="16x16"):
+    out = []
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, mesh, "unicaim"))
+            if r and r.get("notes"):
+                out.append(f"- **{arch} × {shape}**: {r['notes']}")
+    return "\n".join(sorted(set(out)))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--section", default="all",
+                    choices=["dryrun", "roofline", "notes", "all"])
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args(argv)
+    recs = load(args.dir)
+    if args.section in ("dryrun", "all"):
+        print("### single-pod (16x16)\n")
+        print(dryrun_table(recs, "16x16"))
+        print("\n### multi-pod (2x16x16)\n")
+        print(dryrun_table(recs, "2x16x16"))
+    if args.section in ("roofline", "all"):
+        print("\n### roofline (single-pod)\n")
+        print(roofline_table(recs, "16x16"))
+    if args.section in ("notes", "all"):
+        print("\n### per-cell notes\n")
+        print(notes_list(recs))
+
+
+if __name__ == "__main__":
+    main()

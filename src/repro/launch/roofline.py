@@ -1,0 +1,110 @@
+"""Roofline analysis from compiled dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Terms (per device, TPU v5e):
+    compute    = HLO_FLOPs / 197e12           (bf16 MXU peak per chip)
+    memory     = HLO_bytes / 819e9            (HBM bandwidth per chip)
+    collective = collective_bytes / 50e9      (per-link ICI bandwidth)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis() of the SPMD
+per-device program. collective_bytes is parsed from compiled.as_text():
+the result-buffer size of every all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute (result size ≈ bytes moved per device for
+ring algorithms; noted as the standard approximation).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12        # bf16 per chip, TPU v5e
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 0.5, "u4": 0.5,
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# matches e.g.  %ar = f32[16,128]{1,0} all-reduce(...)
+#          or   %ag = (bf16[4,8]{...}, bf16[4,8]{...}) all-gather(...)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(\(?[^)=]*?\)?)\s*(" + "|".join(_COLL_KINDS) + r")(?:-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-buffer bytes per collective kind (per-device program)."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLL_KINDS}
+    seen_done = set()
+    for m in _LINE_RE.finditer(hlo_text):
+        shapes, kind = m.group(1), m.group(2)
+        # avoid double counting start/done pairs: the -done line repeats the
+        # buffer; count only lines NOT ending in -done
+        tail = hlo_text[m.start():m.start() + 200]
+        if f"{kind}-done(" in tail.split("=")[1][:80]:
+            continue
+        total = sum(_shape_bytes(dt, dims)
+                    for dt, dims in _SHAPE_RE.findall(shapes))
+        out[kind] += total
+    out["total"] = sum(out[k] for k in _COLL_KINDS)
+    return out
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   collective_bytes: float) -> Dict[str, float]:
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_accessed / HBM_BW,
+        "collective_s": collective_bytes / ICI_BW,
+    }
+    dominant = max(("compute_s", "memory_s", "collective_s"),
+                   key=lambda k: terms[k])
+    terms["dominant"] = dominant
+    bound = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    terms["roofline_fraction_compute"] = (
+        terms["compute_s"] / bound if bound > 0 else 0.0)
+    return terms
+
+
+def model_flops(cfg, shape, n_layers_active: int = None) -> float:
+    """Analytic MODEL_FLOPS = 6·N·D (train) / 2·N·D (fwd) per step, using
+    ACTIVE params for MoE. D = tokens processed this step (global)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence; attention reads the cache but
+    # the matmul-FLOPs term is 2·N per token
+    return 2.0 * n_active * shape.global_batch
+
+
+def summarize(cell: dict) -> dict:
+    """cell: raw dryrun record → roofline row."""
+    terms = roofline_terms(cell["flops"], cell["bytes_accessed"],
+                           cell["collective_bytes"])
+    n_chips = cell["n_devices"]
+    mf = cell.get("model_flops", 0.0)
+    hlo_total = cell["flops"] * n_chips
+    row = dict(cell)
+    row.update(terms)
+    row["useful_flops_ratio"] = (mf / hlo_total) if hlo_total else 0.0
+    row["step_time_bound_s"] = max(terms["compute_s"], terms["memory_s"],
+                                   terms["collective_s"])
+    row["mfu_bound"] = (mf / n_chips / PEAK_FLOPS) / row["step_time_bound_s"] \
+        if row["step_time_bound_s"] > 0 else 0.0
+    return row

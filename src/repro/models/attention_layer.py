@@ -1,0 +1,133 @@
+"""GQA attention block wired to the UniCAIM cache (train/prefill/decode)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, PruneConfig
+from repro.core.attention import chunked_causal_attention, decode_attention
+from repro.core.cache import KVCache
+from repro.core.pruning import prefill_and_prune
+from repro.models.layers import dense_init, rope
+from repro.runtime.sharding import shard
+
+
+def init_attention(key, cfg: ModelConfig, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, cfg.d_model, cfg.q_dim, dtype),
+        "wk": dense_init(k2, cfg.d_model, cfg.kv_dim, dtype),
+        "wv": dense_init(k3, cfg.d_model, cfg.kv_dim, dtype),
+        "wo": dense_init(k4, cfg.q_dim, cfg.d_model, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dtype)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dtype)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions):
+    """x: [B,T,d] → q [B,Hq,T,dh], k/v [B,Hk,T,dh] (RoPE applied)."""
+    b, t, _ = x.shape
+    q = x @ p["wq"] + (p.get("bq", 0))
+    k = x @ p["wk"] + (p.get("bk", 0))
+    v = x @ p["wv"] + (p.get("bv", 0))
+    q = q.reshape(b, t, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, t, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, t, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.pos == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = shard(q.transpose(0, 2, 1, 3), "batch", "heads", "seq", None)
+    k = shard(k.transpose(0, 2, 1, 3), "batch", "kv_heads", "seq", None)
+    v = shard(v.transpose(0, 2, 1, 3), "batch", "kv_heads", "seq", None)
+    return q, k, v
+
+
+def attention_train(p, x, cfg: ModelConfig, positions,
+                    causal: bool = True, chunk: int = 0):
+    """Full-sequence attention (training / encoder). x: [B,T,d]."""
+    b, t, _ = x.shape
+    chunk = chunk or cfg.attn_chunk
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    if causal:
+        out, _ = chunked_causal_attention(q, k, v, chunk=min(chunk, t))
+    else:  # encoder: dense bidirectional
+        g = cfg.n_heads // cfg.n_kv_heads
+        qg = q.reshape(b, cfg.n_kv_heads, g, t, cfg.head_dim)
+        logits = jnp.einsum("bhgtd,bhsd->bhgts", qg.astype(jnp.float32),
+                            k.astype(jnp.float32)) / jnp.sqrt(float(cfg.head_dim))
+        pr = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhgts,bhsd->bhgtd", pr, v.astype(jnp.float32))
+        out = out.reshape(b, cfg.n_heads, t, cfg.head_dim)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, cfg.q_dim).astype(x.dtype)
+    return out @ p["wo"]
+
+
+def attention_prefill(p, x, cfg: ModelConfig, positions, prune: PruneConfig,
+                      cache: KVCache, chunk: int = 0
+                      ) -> Tuple[jax.Array, KVCache]:
+    """Prompt pass: dense causal attention + one-shot static pruning."""
+    b, t, _ = x.shape
+    chunk = chunk or cfg.attn_chunk
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    cache, out = prefill_and_prune(cache, q, k, v, prune,
+                                   chunk=min(chunk, t))
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, cfg.q_dim).astype(x.dtype)
+    return out @ p["wo"], cache
+
+
+def attention_decode(p, x, cfg: ModelConfig, cache: KVCache,
+                     prune: PruneConfig) -> Tuple[jax.Array, KVCache]:
+    """One decode step. x: [B,d] → (y [B,d], cache)."""
+    b, _ = x.shape
+    q = (x @ p["wq"] + p.get("bq", 0)).reshape(b, cfg.n_heads, cfg.head_dim)
+    k = (x @ p["wk"] + p.get("bk", 0)).reshape(b, cfg.n_kv_heads, cfg.head_dim)
+    v = (x @ p["wv"] + p.get("bv", 0)).reshape(b, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.pos == "rope":
+        pos = cache.step                                    # [B]
+        q = rope(q, pos[:, None], cfg.rope_theta)           # [B,H,dh]
+        k = rope(k, pos[:, None], cfg.rope_theta)
+    cache, out = decode_attention(cache, q, k, v, prune)
+    y = out.reshape(b, cfg.q_dim).astype(x.dtype) @ p["wo"]
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+def init_cross_attention(key, cfg: ModelConfig, dtype):
+    return init_attention(key, cfg, dtype)
+
+
+def cross_attention(p, x, enc_kv, cfg: ModelConfig):
+    """x: [B,T,d] (or [B,1,d] decode); enc_kv: (k,v) [B,Hk,S,dh]."""
+    b, t, _ = x.shape
+    k, v = enc_kv
+    q = (x @ p["wq"] + p.get("bq", 0)).reshape(b, t, cfg.n_heads,
+                                               cfg.head_dim)
+    q = q.transpose(0, 2, 1, 3)
+    g = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(b, cfg.n_kv_heads, g, t, cfg.head_dim)
+    logits = jnp.einsum("bhgtd,bhsd->bhgts", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(float(cfg.head_dim))
+    pr = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgts,bhsd->bhgtd", pr, v.astype(jnp.float32))
+    out = out.reshape(b, cfg.n_heads, t, cfg.head_dim)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, cfg.q_dim).astype(x.dtype)
+    return out @ p["wo"]
+
+
+def encode_cross_kv(p, enc_out, cfg: ModelConfig):
+    """Precompute encoder K/V for the decoder's cross-attention."""
+    b, s, _ = enc_out.shape
+    k = (enc_out @ p["wk"] + p.get("bk", 0)).reshape(b, s, cfg.n_kv_heads,
+                                                     cfg.head_dim)
+    v = (enc_out @ p["wv"] + p.get("bv", 0)).reshape(b, s, cfg.n_kv_heads,
+                                                     cfg.head_dim)
+    return k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)

@@ -1,0 +1,118 @@
+"""Shared neural layers: norms, RoPE, MLPs, embeddings.
+
+Parameters are nested dicts of jnp arrays; init functions are pure (usable
+under jax.eval_shape for the allocation-free dry-run). Activations carry
+logical sharding hints via runtime.sharding.shard().
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.runtime.sharding import shard
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / jnp.sqrt(jnp.float32(d_in))
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg: ModelConfig, dtype):
+    if cfg.norm == "rms":
+        return {"w": jnp.ones((cfg.d_model,), dtype)}
+    return {"w": jnp.ones((cfg.d_model,), dtype),
+            "b": jnp.zeros((cfg.d_model,), dtype)}
+
+
+def apply_norm(p, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rms":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        return (y * p["w"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["w"].astype(jnp.float32)
+            + p["b"].astype(jnp.float32)).astype(x.dtype)
+
+
+def rms_norm_gated(x, z, w, eps: float = 1e-6):
+    """Mamba2 gated RMSNorm: norm(x * silu(z)) * w."""
+    xf = (x * jax.nn.silu(z)).astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / sinusoidal positions
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: [..., T, H, dh] (or [..., H, dh] with positions
+    [...]); rotates pairs (even, odd) of the last axis."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freq       # [..., half]
+    # broadcast over head axis: positions [..., T] → [..., T, 1, half]
+    while ang.ndim < x.ndim:
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freq = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"wo": dense_init(k2, d_ff, cfg.d_model, dtype)}
+    if cfg.act == "swiglu":
+        p["wi"] = dense_init(k1, cfg.d_model, d_ff, dtype)
+        p["wg"] = dense_init(k3, cfg.d_model, d_ff, dtype)
+    else:
+        p["wi"] = dense_init(k1, cfg.d_model, d_ff, dtype)
+    return p
+
+
+def apply_mlp(p, x, act: str):
+    h = x @ p["wi"]
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * h
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    elif act == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(act)
+    h = shard(h, "batch", "seq", "ff")
+    return h @ p["wo"]

@@ -1,0 +1,216 @@
+"""Mamba2 — State Space Duality (SSD) block. [arXiv:2405.21060]
+
+Train/prefill: chunked SSD (quadratic attention-like within a chunk,
+linear recurrence across chunks). Decode: O(1) per-step recurrence on the
+[B, H, P, N] state — the sub-quadratic long-context path for the ssm/hybrid
+assigned archs. UniCAIM pruning is inapplicable here (no KV cache); see
+DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.flags import xscan
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rms_norm_gated
+from repro.runtime.sharding import shard
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array   # [B, K-1, conv_channels] rolling conv window
+    ssm: jax.Array    # [B, H, P, N] recurrent state
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    return d_in, n_heads, conv_ch
+
+
+def init_ssm(key, cfg: ModelConfig, dtype):
+    s = cfg.ssm
+    d_in, n_heads, conv_ch = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model,
+                              2 * d_in + 2 * s.n_groups * s.d_state + n_heads,
+                              dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_kernel, conv_ch),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm_w": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(ks[2], d_in, cfg.d_model, dtype),
+    }
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> SSMState:
+    s = cfg.ssm
+    d_in, n_heads, conv_ch = _dims(cfg)
+    return SSMState(
+        conv=jnp.zeros((batch, s.conv_kernel - 1, conv_ch), dtype),
+        ssm=jnp.zeros((batch, n_heads, s.head_dim, s.d_state), jnp.float32),
+    )
+
+
+def _causal_conv(xbc, w, b, prior=None):
+    """Depthwise causal conv over time. xbc: [B,T,C], w: [K,C]."""
+    k = w.shape[0]
+    if prior is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = prior.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)                # [B,T+K-1,C]
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i][None, None] for i in range(k))
+    new_prior = xp[:, -(k - 1):] if k > 1 else None
+    return jax.nn.silu(out + b[None, None]), new_prior
+
+
+def _split(p, x, cfg: ModelConfig):
+    s = cfg.ssm
+    d_in, n_heads, _ = _dims(cfg)
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:d_in + d_in + 2 * s.n_groups * s.d_state]
+    dt = zxbcdt[..., -n_heads:]
+    return z, xbc, dt
+
+
+def _heads(xbc, cfg: ModelConfig):
+    s = cfg.ssm
+    d_in, n_heads, _ = _dims(cfg)
+    xs = xbc[..., :d_in]
+    bc = xbc[..., d_in:]
+    b_mat = bc[..., :s.n_groups * s.d_state]
+    c_mat = bc[..., s.n_groups * s.d_state:]
+    lead = xs.shape[:-1]
+    xs = xs.reshape(*lead, n_heads, s.head_dim)
+    b_mat = b_mat.reshape(*lead, s.n_groups, s.d_state)
+    c_mat = c_mat.reshape(*lead, s.n_groups, s.d_state)
+    # broadcast groups over heads
+    rep = n_heads // s.n_groups
+    b_mat = jnp.repeat(b_mat, rep, axis=-2)
+    c_mat = jnp.repeat(c_mat, rep, axis=-2)
+    return xs, b_mat, c_mat
+
+
+def ssd_chunked(xs, dt, A, b_mat, c_mat, chunk: int,
+                initial_state=None):
+    """Chunked SSD scan.
+
+    xs: [B,T,H,P]; dt: [B,T,H] (post-softplus); A: [H] (negative);
+    b_mat/c_mat: [B,T,H,N]. Returns (y [B,T,H,P], final_state [B,H,P,N]).
+    """
+    bsz, t, h, p_dim = xs.shape
+    n = b_mat.shape[-1]
+    q = min(chunk, t)
+    t_real = t
+    pad = (-t) % q
+    if pad:
+        # zero-pad time: x=B=0 ⇒ no state contribution; dt=0 ⇒ decay=1,
+        # so the final state is unaffected; pad outputs sliced off below
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        t = t + pad
+    nc = t // q
+
+    xs = xs.reshape(bsz, nc, q, h, p_dim).astype(jnp.float32)
+    dt = dt.reshape(bsz, nc, q, h).astype(jnp.float32)
+    bm = b_mat.reshape(bsz, nc, q, h, n).astype(jnp.float32)
+    cm = c_mat.reshape(bsz, nc, q, h, n).astype(jnp.float32)
+
+    da = dt * A[None, None, None]                           # [B,c,Q,H]
+    cum = jnp.cumsum(da, axis=2)
+    # intra-chunk (diagonal) term: attention-like with decay kernel
+    li = cum[:, :, :, None, :]                              # i index
+    lj = cum[:, :, None, :, :]                              # j index
+    seg = jnp.exp(jnp.clip(li - lj, -60.0, 0.0))            # [B,c,Q,Q,H]
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    seg = jnp.where(causal[None, None, :, :, None], seg, 0.0)
+    cb = jnp.einsum("bcihn,bcjhn->bcijh", cm, bm)
+    w = cb * seg * dt[:, :, None, :, :]                     # [B,c,i,j,H]
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", w, xs)
+
+    # chunk states: decay from j to end of chunk
+    decay_end = jnp.exp(jnp.clip(cum[:, :, -1:, :] - cum, -60.0, 0.0))
+    states = jnp.einsum("bcjh,bcjhn,bcjhp->bchpn",
+                        dt * decay_end, bm, xs)             # [B,c,H,P,N]
+    chunk_decay = jnp.exp(jnp.clip(cum[:, :, -1, :], -60.0, 0.0))  # [B,c,H]
+
+    def scan_fn(s_prev, inp):
+        st, dec = inp                                       # [B,H,P,N], [B,H]
+        s_new = s_prev * dec[..., None, None] + st
+        return s_new, s_prev
+
+    init = (jnp.zeros((bsz, h, p_dim, n), jnp.float32)
+            if initial_state is None else initial_state.astype(jnp.float32))
+    final, prev_states = xscan(
+        scan_fn, init,
+        (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)                # [B,c,H,P,N]
+
+    # inter-chunk term: read previous chunk state with decay to position i
+    in_decay = jnp.exp(jnp.clip(cum, -60.0, 0.0))           # [B,c,Q,H]
+    y_off = jnp.einsum("bcihn,bchpn,bcih->bcihp", cm, prev_states, in_decay)
+    y = (y_diag + y_off).reshape(bsz, t, h, p_dim)
+    return y[:, :t_real], final
+
+
+def ssm_train(p, x, cfg: ModelConfig, state: SSMState = None,
+              return_state: bool = False):
+    """Full-sequence Mamba2 block. x: [B,T,d] → [B,T,d]."""
+    s = cfg.ssm
+    d_in, n_heads, _ = _dims(cfg)
+    b, t, _ = x.shape
+    z, xbc, dt = _split(p, x, cfg)
+    prior = state.conv if state is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], prior)
+    xs, b_mat, c_mat = _heads(xbc, cfg)
+    # shard SSD heads over `model` so the [B,c,Q,Q,H] intra-chunk kernel
+    # splits across TP (H is divisible by 16 for both assigned SSM archs)
+    xs = shard(xs, "batch", "seq", "heads", None)
+    b_mat = shard(b_mat, "batch", "seq", "heads", None)
+    c_mat = shard(c_mat, "batch", "seq", "heads", None)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    init = state.ssm if state is not None else None
+    y, final = ssd_chunked(xs, dt, A, b_mat, c_mat, s.chunk_size, init)
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, t, d_in).astype(x.dtype)
+    y = rms_norm_gated(y, z, p["norm_w"])
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, SSMState(conv=new_conv, ssm=final)
+    return out
+
+
+def ssm_decode(p, x, cfg: ModelConfig, state: SSMState
+               ) -> Tuple[jax.Array, SSMState]:
+    """One decode step. x: [B,d] → (y [B,d], state)."""
+    s = cfg.ssm
+    d_in, n_heads, _ = _dims(cfg)
+    b, _ = x.shape
+    z, xbc, dt = _split(p, x[:, None, :], cfg)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], state.conv)
+    xs, b_mat, c_mat = _heads(xbc[:, 0], cfg)               # [B,H,P],[B,H,N]
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A[None])                           # [B,H]
+    upd = jnp.einsum("bh,bhn,bhp->bhpn", dt, b_mat.astype(jnp.float32),
+                     xs.astype(jnp.float32))
+    ssm = state.ssm * decay[..., None, None] + upd
+    y = jnp.einsum("bhn,bhpn->bhp", c_mat.astype(jnp.float32), ssm)
+    y = y + p["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, d_in).astype(x.dtype)
+    y = rms_norm_gated(y, z[:, 0], p["norm_w"])
+    return y @ p["out_proj"], SSMState(conv=new_conv, ssm=ssm)

@@ -1,0 +1,663 @@
+"""Unified model zoo: dense / MoE / MLA-MoE / SSM / hybrid / enc-dec.
+
+One `Model` facade per architecture config with three entry points:
+
+  train_logits(params, batch)       — full causal pass (+ aux losses)
+  prefill(params, batch)            — prompt pass, builds the DecodeState
+                                      (one-shot static pruning happens here)
+  decode_step(params, state, tok)   — one token; UniCAIM dynamic pruning +
+                                      static eviction live in this step
+
+Layers are scanned (stacked params) so compile time is O(1) in depth; the
+remat policy wraps the scan body.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.flags import xscan
+
+from repro.configs.base import ModelConfig, PruneConfig
+from repro.core.cache import KVCache, init_cache
+from repro.models import layers as L
+from repro.models.attention_layer import (attention_decode, attention_prefill,
+                                          attention_train, cross_attention,
+                                          encode_cross_kv, init_attention)
+from repro.models.mla import init_mla, mla_decode, mla_prefill, mla_train
+from repro.models.moe import apply_moe, apply_moe_ep_shardmap, init_moe
+from repro.models.ssm import (SSMState, init_ssm, init_ssm_state, ssm_decode,
+                              ssm_train)
+from repro.runtime.sharding import shard
+
+
+class DecodeState(NamedTuple):
+    kv: Optional[KVCache]            # stacked [L_attn, ...]
+    ssm: Optional[SSMState]          # stacked [L_ssm, ...]
+    cross: Optional[Tuple[jax.Array, jax.Array]]  # [L_dec, B, Hk, S, dh]
+
+
+def _stack_init(fn, key, n: int):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# per-layer init/apply
+# ---------------------------------------------------------------------------
+
+
+def _moe(pm, h, cfg: ModelConfig):
+    """MoE dispatch: shard_map EP path when enabled + mesh active and
+    divisibility holds; XLA sort-based dispatch otherwise."""
+    if cfg.moe_ep:
+        from repro.runtime.sharding import active_mesh
+        mesh = active_mesh()
+        if (mesh is not None and "model" in mesh.shape
+                and cfg.moe.n_experts % mesh.shape["model"] == 0):
+            return apply_moe_ep_shardmap(pm, h, cfg, mesh)
+    return apply_moe(pm, h, cfg)
+
+
+def _init_block(key, cfg: ModelConfig, dtype, kind: str):
+    """One residual block. kind: dense | moe | mla_dense | mla_moe | ssm |
+    encdec_enc | encdec_dec."""
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {}
+    if kind == "ssm":
+        p["norm"] = L.init_norm(cfg, dtype)
+        p["ssm"] = init_ssm(ks[0], cfg, dtype)
+        return p
+    p["ln1"] = L.init_norm(cfg, dtype)
+    p["ln2"] = L.init_norm(cfg, dtype)
+    if kind.startswith("mla"):
+        p["attn"] = init_mla(ks[0], cfg, dtype)
+    else:
+        p["attn"] = init_attention(ks[0], cfg, dtype)
+    if kind == "encdec_dec":
+        p["ln_x"] = L.init_norm(cfg, dtype)
+        p["xattn"] = init_attention(ks[1], cfg, dtype)
+    if kind.endswith("moe"):
+        p["moe"] = init_moe(ks[2], cfg, dtype)
+    else:
+        d_ff = cfg.d_ff if cfg.moe is None else cfg.moe.d_ff_dense
+        p["mlp"] = L.init_mlp(ks[3], cfg, d_ff or cfg.d_ff, dtype)
+    return p
+
+
+def _block_train(p, x, cfg: ModelConfig, positions, kind: str,
+                 cross_kv=None, causal: bool = True):
+    """Residual block, full sequence. Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "ssm":
+        h = L.apply_norm(p["norm"], x, cfg.norm)
+        return x + ssm_train(p["ssm"], h, cfg), aux
+    h = L.apply_norm(p["ln1"], x, cfg.norm)
+    if kind.startswith("mla"):
+        a = mla_train(p["attn"], h, cfg, positions)
+    else:
+        a = attention_train(p["attn"], h, cfg, positions, causal=causal)
+    x = x + a
+    if kind == "encdec_dec":
+        h = L.apply_norm(p["ln_x"], x, cfg.norm)
+        x = x + cross_attention(p["xattn"], h, cross_kv, cfg)
+    h = L.apply_norm(p["ln2"], x, cfg.norm)
+    if kind.endswith("moe"):
+        y, aux = _moe(p["moe"], h, cfg)
+    else:
+        y = L.apply_mlp(p["mlp"], h, cfg.act)
+    return x + y, aux
+
+
+def _block_prefill(p, x, cfg, positions, prune, cache, kind: str,
+                   cross_kv=None):
+    """Residual block prompt pass with cache fill. Returns (x, cache)."""
+    if kind == "ssm":
+        h = L.apply_norm(p["norm"], x, cfg.norm)
+        y, st = ssm_train(p["ssm"], h, cfg, cache, return_state=True)
+        return x + y, st
+    h = L.apply_norm(p["ln1"], x, cfg.norm)
+    if kind.startswith("mla"):
+        a, cache = mla_prefill(p["attn"], h, cfg, positions, prune, cache)
+    else:
+        a, cache = attention_prefill(p["attn"], h, cfg, positions, prune,
+                                     cache)
+    x = x + a
+    if kind == "encdec_dec":
+        h = L.apply_norm(p["ln_x"], x, cfg.norm)
+        x = x + cross_attention(p["xattn"], h, cross_kv, cfg)
+    h = L.apply_norm(p["ln2"], x, cfg.norm)
+    if kind.endswith("moe"):
+        y, _ = _moe(p["moe"], h, cfg)
+    else:
+        y = L.apply_mlp(p["mlp"], h, cfg.act)
+    return x + y, cache
+
+
+def _block_decode(p, x, cfg, prune, cache, kind: str, cross_kv=None):
+    """Residual block, one token. x: [B,d]. Returns (x, cache)."""
+    if kind == "ssm":
+        h = L.apply_norm(p["norm"], x[:, None, :], cfg.norm)[:, 0]
+        y, st = ssm_decode(p["ssm"], h, cfg, cache)
+        return x + y, st
+    h = L.apply_norm(p["ln1"], x[:, None, :], cfg.norm)[:, 0]
+    if kind.startswith("mla"):
+        a, cache = mla_decode(p["attn"], h, cfg, cache, prune)
+    else:
+        a, cache = attention_decode(p["attn"], h, cfg, cache, prune)
+    x = x + a
+    if kind == "encdec_dec":
+        h = L.apply_norm(p["ln_x"], x[:, None, :], cfg.norm)
+        x = x + cross_attention(p["xattn"], h, cross_kv, cfg)[:, 0]
+    h = L.apply_norm(p["ln2"], x[:, None, :], cfg.norm)[:, 0]
+    if kind.endswith("moe"):
+        y, _ = _moe(p["moe"], h[:, None, :], cfg)
+        y = y[:, 0]
+    else:
+        y = L.apply_mlp(p["mlp"], h[:, None, :], cfg.act)[:, 0]
+    return x + y, cache
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+class Model:
+    """Family-dispatching model facade (pure functions; params are pytrees)."""
+
+    def __init__(self, cfg: ModelConfig, prune: PruneConfig,
+                 remat: bool = False, decode_slots: Optional[int] = None,
+                 remat_policy: str = "nothing"):
+        cfg_ok = cfg.family in ("dense", "moe", "mla_moe", "ssm", "hybrid",
+                                "encdec")
+        assert cfg_ok, cfg.family
+        self.cfg = cfg
+        self.prune = prune
+        self.remat = remat
+        # 'nothing' = full recompute in bwd (min memory); 'dots' = keep
+        # matmul outputs (no recompute of the big GEMMs — §Perf knob)
+        self.remat_policy = remat_policy
+        # decode cache size: the assigned shape's seq_len for dry-run cells,
+        # or the paper budget H+M when the technique caps the cache
+        self.decode_slots = decode_slots or prune.slots
+
+    def _ckpt_policy(self):
+        return {
+            "nothing": jax.checkpoint_policies.nothing_saveable,
+            "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        }[self.remat_policy]
+
+    # -- segments ----------------------------------------------------------
+
+    def _segments(self):
+        """[(kind, n_layers)] for the main stack."""
+        cfg = self.cfg
+        if cfg.family == "dense":
+            return [("dense", cfg.num_layers)]
+        if cfg.family == "moe":
+            return [("moe", cfg.num_layers)]
+        if cfg.family == "mla_moe":
+            k = cfg.moe.dense_first_k
+            return [("mla_dense", k), ("mla_moe", cfg.num_layers - k)]
+        if cfg.family == "ssm":
+            return [("ssm", cfg.num_layers)]
+        if cfg.family == "encdec":
+            return [("encdec_enc", cfg.enc_layers),
+                    ("encdec_dec", cfg.dec_layers)]
+        if cfg.family == "hybrid":
+            return [("hybrid", cfg.num_layers)]
+        raise ValueError(cfg.family)
+
+    def attn_layer_count(self) -> int:
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return 0
+        if cfg.family == "hybrid":
+            return cfg.num_layers // cfg.attn_period
+        if cfg.family == "encdec":
+            return cfg.dec_layers
+        return cfg.num_layers
+
+    # -- init ---------------------------------------------------------------
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = _dtype(cfg.param_dtype)
+        keys = jax.random.split(key, 10)
+        params: Dict[str, Any] = {
+            "embed": L.embed_init(keys[0], cfg.vocab_size, cfg.d_model, dt),
+            "final_norm": L.init_norm(cfg, dt),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L.dense_init(keys[1], cfg.d_model,
+                                             cfg.vocab_size, dt)
+        if cfg.frontend != "none":
+            params["frontend_adapter"] = L.dense_init(
+                keys[2], cfg.d_model, cfg.d_model, dt)
+        if cfg.family == "hybrid":
+            n_groups = cfg.num_layers // cfg.attn_period
+            rem = cfg.num_layers - n_groups * cfg.attn_period
+            params["ssm_groups"] = _stack_init(
+                lambda k: _stack_init(
+                    lambda k2: _init_block(k2, cfg, dt, "ssm"),
+                    k, cfg.attn_period),
+                keys[3], n_groups)
+            if rem:
+                params["ssm_tail"] = _stack_init(
+                    lambda k: _init_block(k, cfg, dt, "ssm"), keys[4], rem)
+            params["shared_attn"] = _init_block(keys[5], cfg, dt, "dense")
+            return params
+        segs = self._segments()
+        for i, (kind, n) in enumerate(segs):
+            if n == 0:
+                continue
+            params[f"seg{i}_{kind}"] = _stack_init(
+                lambda k, kind=kind: _init_block(k, cfg, dt, kind),
+                keys[3 + i], n)
+        if cfg.mtp_depth > 0:
+            params["mtp"] = {
+                "proj": L.dense_init(keys[8], 2 * cfg.d_model, cfg.d_model, dt),
+                "norm": L.init_norm(cfg, dt),
+                "block": _init_block(keys[9], cfg, dt, "mla_dense"
+                                     if cfg.mla else "dense"),
+            }
+        return params
+
+    # -- embeddings ---------------------------------------------------------
+
+    def _embed_tokens(self, params, tokens):
+        x = params["embed"][tokens]
+        return x.astype(_dtype(self.cfg.compute_dtype))
+
+    def _logits(self, params, x):
+        x = L.apply_norm(params["final_norm"], x, self.cfg.norm)
+        head = (params["embed"].T if self.cfg.tie_embeddings
+                else params["lm_head"])
+        logits = x.astype(jnp.float32) @ head.astype(jnp.float32)
+        return shard(logits, "batch", "seq", "vocab")
+
+    def _prepend_frontend(self, params, batch, x):
+        cfg = self.cfg
+        if cfg.frontend == "none" or cfg.family == "encdec":
+            return x, 0
+        emb = batch[f"{cfg.frontend}_embed"].astype(x.dtype)
+        emb = emb @ params["frontend_adapter"]
+        return jnp.concatenate([emb, x], axis=1), emb.shape[1]
+
+    # -- scan helpers --------------------------------------------------------
+
+    def _scan_train(self, stacked, x, positions, kind, cross_kv=None,
+                    causal=True):
+        cfg = self.cfg
+
+        def body(x, pl):
+            y, aux = _block_train(pl, x, cfg, positions, kind,
+                                  cross_kv=cross_kv, causal=causal)
+            return y, aux
+
+        if self.remat:
+            body = jax.checkpoint(body, policy=self._ckpt_policy())
+        x, auxs = xscan(body, x, stacked)
+        return x, jnp.sum(auxs)
+
+    # -- train ---------------------------------------------------------------
+
+    def head_matrix(self, params):
+        return (params["embed"].T if self.cfg.tie_embeddings
+                else params["lm_head"])
+
+    def train_hidden(self, params, batch) -> Tuple[jax.Array, jax.Array]:
+        """Backbone pass → (post-final-norm hidden [B,T,d], aux). Lets the
+        loss chunk the vocab projection (§Perf) instead of materialising
+        [B,T,V] logits."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, t = tokens.shape
+        aux_total = jnp.zeros((), jnp.float32)
+
+        if cfg.family == "encdec":
+            enc = batch["enc_embed"].astype(_dtype(cfg.compute_dtype))
+            pos_e = jnp.arange(enc.shape[1])[None]
+            enc = enc + L.sinusoidal(pos_e, cfg.d_model).astype(enc.dtype)
+            enc, aux = self._scan_train(params["seg0_encdec_enc"], enc,
+                                        pos_e, "encdec_enc", causal=False)
+            aux_total += aux
+            x = self._embed_tokens(params, tokens)
+            pos = jnp.arange(t)[None]
+            if cfg.pos == "sinusoidal":
+                x = x + L.sinusoidal(pos, cfg.d_model).astype(x.dtype)
+            # cross K/V from encoder output, per decoder layer
+            xkv = jax.vmap(lambda pl: encode_cross_kv(pl["xattn"], enc, cfg)
+                           )(params["seg1_encdec_dec"])
+            def body(x, inp):
+                pl, ckv = inp
+                y, aux = _block_train(pl, x, cfg, pos, "encdec_dec",
+                                      cross_kv=ckv)
+                return y, aux
+            if self.remat:
+                body = jax.checkpoint(body, policy=self._ckpt_policy())
+            x, auxs = xscan(body, x, (params["seg1_encdec_dec"], xkv))
+            self._hidden_for_mtp = x
+            h = L.apply_norm(params["final_norm"], x, cfg.norm)
+            return h, aux_total + jnp.sum(auxs)
+
+        x = self._embed_tokens(params, tokens)
+        x, n_front = self._prepend_frontend(params, batch, x)
+        x = shard(x, "batch", "seq", None)
+        pos = jnp.arange(x.shape[1])[None]
+        if cfg.pos == "sinusoidal":
+            x = x + L.sinusoidal(pos, cfg.d_model).astype(x.dtype)
+
+        if cfg.family == "hybrid":
+            x, aux = self._hybrid_train(params, x, pos)
+            aux_total += aux
+        else:
+            for i, (kind, n) in enumerate(self._segments()):
+                if n == 0:
+                    continue
+                x, aux = self._scan_train(params[f"seg{i}_{kind}"], x, pos,
+                                          kind)
+                aux_total += aux
+        if n_front:
+            x = x[:, n_front:]
+        self._hidden_for_mtp = x
+        h = L.apply_norm(params["final_norm"], x, cfg.norm)
+        return h, aux_total
+
+    def train_logits(self, params, batch) -> Tuple[jax.Array, jax.Array]:
+        """batch: {'tokens': [B,T], optional '<frontend>_embed',
+        'enc_embed'} → (logits [B,T,V], aux)."""
+        h, aux_total = self.train_hidden(params, batch)
+        head = self.head_matrix(params)
+        logits = h.astype(jnp.float32) @ head.astype(jnp.float32)
+        return shard(logits, "batch", "seq", "vocab"), aux_total
+
+    def train_outputs(self, params, batch) -> Dict[str, jax.Array]:
+        """Main logits + aux + (optional) MTP logits from one backbone pass."""
+        logits, aux = self.train_logits(params, batch)
+        out = {"logits": logits, "aux": aux}
+        cfg = self.cfg
+        if cfg.mtp_depth > 0 and "mtp" in params:
+            tokens = batch["tokens"]
+            h = self._hidden_for_mtp[:, :-1]
+            e_next = self._embed_tokens(params, tokens[:, 1:])
+            z = (jnp.concatenate([h, e_next], axis=-1)
+                 @ params["mtp"]["proj"])
+            pos = jnp.arange(z.shape[1])[None]
+            z, _ = _block_train(params["mtp"]["block"], z, cfg, pos,
+                                "mla_dense" if cfg.mla else "dense")
+            z = L.apply_norm(params["mtp"]["norm"], z, cfg.norm)
+            head = (params["embed"].T if cfg.tie_embeddings
+                    else params["lm_head"])
+            out["mtp_logits"] = (z.astype(jnp.float32)
+                                 @ head.astype(jnp.float32))
+        return out
+
+    def _hybrid_train(self, params, x, pos):
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+
+        def group_body(x, inp):
+            gp = inp
+            x, _ = _block_train(params["shared_attn"], x, cfg, pos, "dense")
+            def inner(x, pl):
+                y, a = _block_train(pl, x, cfg, pos, "ssm")
+                return y, a
+            x, _ = xscan(inner, x, gp)
+            return x, jnp.zeros(())
+
+        body = group_body
+        if self.remat:
+            body = jax.checkpoint(body, policy=self._ckpt_policy())
+        x, _ = xscan(body, x, params["ssm_groups"])
+        if "ssm_tail" in params:
+            def inner(x, pl):
+                y, a = _block_train(pl, x, cfg, pos, "ssm")
+                return y, a
+            x, _ = xscan(inner, x, params["ssm_tail"])
+        return x, aux
+
+    # -- decode state ---------------------------------------------------------
+
+    def init_decode_state(self, batch_size: int, slots: Optional[int] = None,
+                          cross_len: int = 0) -> DecodeState:
+        cfg = self.cfg
+        slots = slots or self.decode_slots
+        dt = _dtype(cfg.compute_dtype)
+        kv = None
+        ssm = None
+        cross = None
+        n_attn = self.attn_layer_count()
+        if n_attn > 0:
+            if cfg.mla is not None:
+                one = init_cache(batch_size, 1, cfg.mla.latent_dim, slots,
+                                 self.prune, dt, latent=True)
+            else:
+                one = init_cache(batch_size, cfg.n_kv_heads, cfg.head_dim,
+                                 slots, self.prune, dt)
+            kv = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n_attn,) + a.shape), one)
+        if cfg.family in ("ssm", "hybrid"):
+            n_ssm = cfg.num_layers
+            one = init_ssm_state(cfg, batch_size, jnp.float32)
+            ssm = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n_ssm,) + a.shape), one)
+        if cfg.family == "encdec" and cross_len > 0:
+            cross = (jnp.zeros((cfg.dec_layers, batch_size, cfg.n_kv_heads,
+                                cross_len, cfg.head_dim), dt),) * 2
+        return DecodeState(kv=kv, ssm=ssm, cross=cross)
+
+    # -- prefill ---------------------------------------------------------------
+
+    def prefill(self, params, batch) -> Tuple[jax.Array, DecodeState]:
+        """Prompt pass with one-shot static pruning.
+        Returns (last-position logits [B,V], DecodeState)."""
+        cfg = self.cfg
+        prune = self.prune
+        tokens = batch["tokens"]
+        b, t = tokens.shape
+
+        if cfg.family == "encdec":
+            return self._prefill_encdec(params, batch)
+
+        x = self._embed_tokens(params, tokens)
+        x, n_front = self._prepend_frontend(params, batch, x)
+        pos = jnp.arange(x.shape[1])[None]
+        if cfg.pos == "sinusoidal":
+            x = x + L.sinusoidal(pos, cfg.d_model).astype(x.dtype)
+        state = self.init_decode_state(b)
+
+        if cfg.family == "hybrid":
+            x, state = self._prefill_hybrid(params, x, pos, state)
+        elif cfg.family == "ssm":
+            def body(x, inp):
+                pl, st = inp
+                y, st2 = _block_prefill(pl, x, cfg, pos, prune, st, "ssm")
+                return y, st2
+            x, new_ssm = xscan(body, x, (params["seg0_ssm"],
+                                                state.ssm))
+            state = state._replace(ssm=new_ssm)
+        else:
+            li = 0
+            new_caches = []
+            for i, (kind, n) in enumerate(self._segments()):
+                if n == 0:
+                    continue
+                kv_seg = jax.tree.map(lambda a: a[li:li + n], state.kv)
+                def body(x, inp, kind=kind):
+                    pl, c = inp
+                    y, c2 = _block_prefill(pl, x, cfg, pos, prune, c, kind)
+                    return y, c2
+                x, kv_out = xscan(body, x,
+                                         (params[f"seg{i}_{kind}"], kv_seg))
+                new_caches.append(kv_out)
+                li += n
+            kv = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_caches)
+            state = state._replace(kv=kv)
+        logits = self._logits(params, x[:, -1:])[:, 0]
+        return logits, state
+
+    def _prefill_hybrid(self, params, x, pos, state: DecodeState):
+        cfg = self.cfg
+        period = cfg.attn_period
+        n_groups = cfg.num_layers // period
+
+        def group_body(carry, inp):
+            x = carry
+            gp, kv_g, ssm_g = inp
+            x, kv_g2 = _block_prefill(params["shared_attn"], x, cfg, pos,
+                                      self.prune, kv_g, "dense")
+            def inner(x, inp2):
+                pl, st = inp2
+                y, st2 = _block_prefill(pl, x, cfg, pos, self.prune, st,
+                                        "ssm")
+                return y, st2
+            x, ssm_g2 = xscan(inner, x, (gp, ssm_g))
+            return x, (kv_g2, ssm_g2)
+
+        ssm_main = jax.tree.map(lambda a: a[:n_groups * period]
+                                .reshape((n_groups, period) + a.shape[1:]),
+                                state.ssm)
+        x, (kv_new, ssm_new) = xscan(
+            group_body, x, (params["ssm_groups"], state.kv, ssm_main))
+        ssm_new = jax.tree.map(
+            lambda a: a.reshape((n_groups * period,) + a.shape[2:]), ssm_new)
+        if "ssm_tail" in params:
+            ssm_tail = jax.tree.map(lambda a: a[n_groups * period:],
+                                    state.ssm)
+            def inner(x, inp2):
+                pl, st = inp2
+                y, st2 = _block_prefill(pl, x, cfg, pos, self.prune, st,
+                                        "ssm")
+                return y, st2
+            x, tail_new = xscan(inner, x, (params["ssm_tail"],
+                                                  ssm_tail))
+            ssm_new = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0),
+                                   ssm_new, tail_new)
+        return x, DecodeState(kv=kv_new, ssm=ssm_new, cross=None)
+
+    def _prefill_encdec(self, params, batch):
+        cfg = self.cfg
+        prune = self.prune
+        enc = batch["enc_embed"].astype(_dtype(cfg.compute_dtype))
+        pos_e = jnp.arange(enc.shape[1])[None]
+        enc = enc + L.sinusoidal(pos_e, cfg.d_model).astype(enc.dtype)
+        enc, _ = self._scan_train(params["seg0_encdec_enc"], enc, pos_e,
+                                  "encdec_enc", causal=False)
+        xkv = jax.vmap(lambda pl: encode_cross_kv(pl["xattn"], enc, cfg)
+                       )(params["seg1_encdec_dec"])
+        tokens = batch["tokens"]
+        b, t = tokens.shape
+        x = self._embed_tokens(params, tokens)
+        pos = jnp.arange(t)[None]
+        x = x + L.sinusoidal(pos, cfg.d_model).astype(x.dtype)
+        state = self.init_decode_state(b, cross_len=enc.shape[1])
+
+        def body(x, inp):
+            pl, c, ckv = inp
+            y, c2 = _block_prefill(pl, x, cfg, pos, prune, c, "encdec_dec",
+                                   cross_kv=ckv)
+            return y, c2
+        x, kv = xscan(body, x, (params["seg1_encdec_dec"], state.kv,
+                                       xkv))
+        state = DecodeState(kv=kv, ssm=None, cross=xkv)
+        return self._logits(params, x[:, -1:])[:, 0], state
+
+    # -- decode ---------------------------------------------------------------
+
+    def decode_step(self, params, state: DecodeState, token: jax.Array
+                    ) -> Tuple[jax.Array, DecodeState]:
+        """token: [B] int32 → (logits [B,V], state)."""
+        cfg = self.cfg
+        prune = self.prune
+        x = params["embed"][token].astype(_dtype(cfg.compute_dtype))
+
+        if cfg.family == "encdec":
+            pos = state.kv.step[0][:, None]                  # [B,1]
+            x = x + L.sinusoidal(pos, cfg.d_model)[:, 0].astype(x.dtype)
+            def body(x, inp):
+                pl, c, ckv = inp
+                y, c2 = _block_decode(pl, x, cfg, prune, c, "encdec_dec",
+                                      cross_kv=ckv)
+                return y, c2
+            x, kv = xscan(body, x, (params["seg1_encdec_dec"],
+                                           state.kv, state.cross))
+            state = state._replace(kv=kv)
+            return self._logits(params, x[:, None])[:, 0], state
+
+        if cfg.pos == "sinusoidal" and state.kv is not None:
+            pos = state.kv.step[0][:, None]
+            x = x + L.sinusoidal(pos, cfg.d_model)[:, 0].astype(x.dtype)
+
+        if cfg.family == "hybrid":
+            x, state = self._decode_hybrid(params, x, state)
+        elif cfg.family == "ssm":
+            def body(x, inp):
+                pl, st = inp
+                y, st2 = _block_decode(pl, x, cfg, prune, st, "ssm")
+                return y, st2
+            x, new_ssm = xscan(body, x, (params["seg0_ssm"],
+                                                state.ssm))
+            state = state._replace(ssm=new_ssm)
+        else:
+            li = 0
+            new_caches = []
+            for i, (kind, n) in enumerate(self._segments()):
+                if n == 0:
+                    continue
+                kv_seg = jax.tree.map(lambda a: a[li:li + n], state.kv)
+                def body(x, inp, kind=kind):
+                    pl, c = inp
+                    y, c2 = _block_decode(pl, x, cfg, prune, c, kind)
+                    return y, c2
+                x, kv_out = xscan(body, x,
+                                         (params[f"seg{i}_{kind}"], kv_seg))
+                new_caches.append(kv_out)
+                li += n
+            kv = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_caches)
+            state = state._replace(kv=kv)
+        return self._logits(params, x[:, None])[:, 0], state
+
+    def _decode_hybrid(self, params, x, state: DecodeState):
+        cfg = self.cfg
+        period = cfg.attn_period
+        n_groups = cfg.num_layers // period
+
+        def group_body(x, inp):
+            gp, kv_g, ssm_g = inp
+            x, kv_g2 = _block_decode(params["shared_attn"], x, cfg,
+                                     self.prune, kv_g, "dense")
+            def inner(x, inp2):
+                pl, st = inp2
+                y, st2 = _block_decode(pl, x, cfg, self.prune, st, "ssm")
+                return y, st2
+            x, ssm_g2 = xscan(inner, x, (gp, ssm_g))
+            return x, (kv_g2, ssm_g2)
+
+        ssm_main = jax.tree.map(lambda a: a[:n_groups * period]
+                                .reshape((n_groups, period) + a.shape[1:]),
+                                state.ssm)
+        x, (kv_new, ssm_new) = xscan(
+            group_body, x, (params["ssm_groups"], state.kv, ssm_main))
+        ssm_new = jax.tree.map(
+            lambda a: a.reshape((n_groups * period,) + a.shape[2:]), ssm_new)
+        if "ssm_tail" in params:
+            ssm_tail = jax.tree.map(lambda a: a[n_groups * period:],
+                                    state.ssm)
+            def inner(x, inp2):
+                pl, st = inp2
+                y, st2 = _block_decode(pl, x, cfg, self.prune, st, "ssm")
+                return y, st2
+            x, tail_new = xscan(inner, x, (params["ssm_tail"],
+                                                  ssm_tail))
+            ssm_new = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0),
+                                   ssm_new, tail_new)
+        return x, DecodeState(kv=kv_new, ssm=ssm_new, cross=None)

@@ -1,0 +1,17 @@
+"""Learning-rate schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = peak_lr * (s + 1.0) / max(warmup, 1)   # step 0 is never a no-op
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(s < warmup, warm, cos)
+
+
+def constant(step, lr: float):
+    return jnp.full_like(step, lr, dtype=jnp.float32)

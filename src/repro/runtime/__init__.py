@@ -1,0 +1,9 @@
+from repro.runtime.sharding import (active_mesh, decode_state_pspecs,
+                                    logical_to_spec, named_sharding,
+                                    params_pspecs, params_shardings, shard,
+                                    use_mesh)
+
+__all__ = [
+    "shard", "use_mesh", "active_mesh", "logical_to_spec", "named_sharding",
+    "params_pspecs", "params_shardings", "decode_state_pspecs",
+]

@@ -1,0 +1,36 @@
+"""Global lowering flags.
+
+`unroll_scans()` makes every framework scan (layer stacks, attention chunk
+loops, SSD chunk recurrences) fully unroll. Used by the dry-run cost probes:
+XLA's cost_analysis counts a while-loop body ONCE regardless of trip count,
+so roofline numbers must come from unrolled HLO. Full-depth compiles stay
+scanned (compile-time proof + memory analysis); shallow unrolled probes
+recover exact per-layer costs by linear extrapolation (launch/dryrun.py).
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+import jax
+
+_UNROLL = [False]
+
+
+@contextmanager
+def unroll_scans(on: bool = True):
+    prev = _UNROLL[0]
+    _UNROLL[0] = on
+    try:
+        yield
+    finally:
+        _UNROLL[0] = prev
+
+
+def scans_unrolled() -> bool:
+    return _UNROLL[0]
+
+
+def xscan(body, init, xs, length=None):
+    """jax.lax.scan honouring the global unroll flag."""
+    return jax.lax.scan(body, init, xs, length=length,
+                        unroll=True if _UNROLL[0] else 1)

@@ -1,0 +1,291 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Tensors are annotated with *logical* axis names; a rule table maps each
+logical axis to an ordered list of mesh-axis candidates. The first candidate
+that (a) exists in the active mesh and (b) evenly divides the dimension is
+chosen; otherwise the dimension is replicated. This is what lets one rule
+table serve archs whose head counts (24, 40, 8, …) don't all divide the
+16-way model axis — see DESIGN.md §4.
+
+Activations use `shard(x, *logical_axes)` (a with_sharding_constraint that
+is a no-op outside a mesh context); parameters/caches get PartitionSpecs via
+`logical_to_spec`.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis → ordered mesh-axis candidates; a tuple candidate means the
+# dim shards over the COMBINED axes (e.g. pod×data = 32-way DP)
+DEFAULT_RULES: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
+    ("batch", (("pod", "data"), "data", "pod")),   # DP over pod×data
+    ("fsdp", (("pod", "data"), "data")),           # ZeRO param/opt sharding
+    ("seq", ()),                     # replicated by default (SP opt-in)
+    ("heads", ("model",)),
+    ("kv_heads", ("model",)),
+    ("qdim", ("model",)),            # fused head*dh fallback axis
+    ("ff", ("model",)),
+    ("experts", ("model",)),
+    ("vocab", ("model",)),
+    ("d_model", ()),
+    ("slots", ("model",)),           # long-context cache slot sharding
+    ("stack", ()),                   # scanned layer axis — never sharded
+)
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules = dict(DEFAULT_RULES)
+        self.overrides = {}
+
+
+_CTX = _Ctx()
+
+
+class use_mesh:
+    """Context manager installing a mesh + optional rule overrides."""
+
+    def __init__(self, mesh: Mesh, **rule_overrides):
+        self.mesh = mesh
+        self.rule_overrides = {k: tuple(v) if not isinstance(v, tuple) else v
+                               for k, v in rule_overrides.items()}
+
+    def __enter__(self):
+        self._saved = (_CTX.mesh, dict(_CTX.rules))
+        _CTX.mesh = self.mesh
+        _CTX.rules.update(self.rule_overrides)
+        return self.mesh
+
+    def __exit__(self, *exc):
+        _CTX.mesh, _CTX.rules = self._saved
+        return False
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def _pick_axis(logical: str, dim: int, mesh: Mesh, used: set):
+    """First viable candidate; tuple candidates shard over combined axes."""
+    for cand in _CTX.rules.get(logical, ()):
+        axes = cand if isinstance(cand, tuple) else (cand,)
+        if any(a not in mesh.shape or a in used for a in axes):
+            continue
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if size > 1 and dim % size == 0:
+            return cand
+    return None
+
+
+def logical_to_spec(logical_axes: Sequence[Optional[str]],
+                    shape: Sequence[int],
+                    mesh: Optional[Mesh] = None) -> P:
+    """Map logical axis names (None = replicated) to a PartitionSpec."""
+    mesh = mesh or _CTX.mesh
+    if mesh is None:
+        return P()
+    used: set = set()
+    out = []
+    for name, dim in zip(logical_axes, shape):
+        ax = _pick_axis(name, dim, mesh, used) if name else None
+        if ax:
+            used.update(ax if isinstance(ax, tuple) else (ax,))
+        out.append(ax)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op without a mesh."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+    spec = logical_to_spec(logical_axes, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(logical_axes: Sequence[Optional[str]],
+                   shape: Sequence[int],
+                   mesh: Optional[Mesh] = None) -> Optional[NamedSharding]:
+    mesh = mesh or _CTX.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, logical_to_spec(logical_axes, shape, mesh))
+
+
+# ---------------------------------------------------------------------------
+# Parameter / state sharding rules (path-name based, MaxText-style)
+# ---------------------------------------------------------------------------
+
+# (substring-of-path, trailing logical axes). First match wins; extra leading
+# dims (scanned layer stacks) are padded with None ('stack').
+_PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    ("embed", ("vocab", "fsdp")),
+    ("lm_head", ("fsdp", "vocab")),
+    ("frontend_adapter", ("fsdp", None)),
+    ("mtp/proj", ("fsdp", None)),
+    # attention
+    ("attn/wq_a", ("fsdp", None)),
+    ("attn/wkv_a", ("fsdp", None)),
+    ("attn/wq_b", (None, "qdim")),
+    ("attn/wkv_b", (None, "qdim")),
+    ("attn/wq", ("fsdp", "qdim")),
+    ("attn/wk", ("fsdp", "qdim")),
+    ("attn/wv", ("fsdp", "qdim")),
+    ("attn/wo", ("qdim", "fsdp")),
+    ("xattn/wq", ("fsdp", "qdim")),
+    ("xattn/wk", ("fsdp", "qdim")),
+    ("xattn/wv", ("fsdp", "qdim")),
+    ("xattn/wo", ("qdim", "fsdp")),
+    # MoE (3D expert weights) before dense MLP rules
+    ("moe/router", (None, None)),
+    # experts → model when divisible (EP); otherwise the expert-ffn dim
+    # takes the model axis (grok-1: 8 experts < 16-way model axis)
+    ("moe/wi", ("experts", "fsdp", "ff")),
+    ("moe/wg", ("experts", "fsdp", "ff")),
+    ("moe/wo", ("experts", "ff", "fsdp")),
+    ("moe/shared", ("fsdp", "ff")),      # overridden below for wo by order
+    # dense MLP
+    ("mlp/wi", ("fsdp", "ff")),
+    ("mlp/wg", ("fsdp", "ff")),
+    ("mlp/wo", ("ff", "fsdp")),
+    # SSM
+    ("ssm/in_proj", ("fsdp", "ff")),
+    ("ssm/out_proj", ("ff", "fsdp")),
+)
+
+
+def param_logical_axes(path: str, ndim: int) -> Tuple[Optional[str], ...]:
+    """Trailing-dim logical axes for a parameter leaf path like
+    'seg0_moe/3/moe/wi'. Unmatched leaves are replicated."""
+    # moe shared-expert wo needs the transposed rule
+    if "moe/shared" in path and path.endswith("wo"):
+        base: Tuple[Optional[str], ...] = ("ff", "fsdp")
+    else:
+        base = None
+        for pat, axes in _PARAM_RULES:
+            if pat in path:
+                base = axes
+                break
+        if base is None:
+            return (None,) * ndim
+    if ndim < len(base):            # e.g. biases: replicate
+        return (None,) * ndim
+    return (None,) * (ndim - len(base)) + tuple(base)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):          # DictKey
+            parts.append(str(k.key))
+        elif hasattr(k, "name"):       # GetAttrKey (NamedTuple fields)
+            parts.append(str(k.name))
+        elif hasattr(k, "idx"):        # SequenceKey
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def params_pspecs(tree, mesh: Optional[Mesh] = None):
+    """Pytree of PartitionSpecs for a parameter/optimizer-state tree.
+
+    Works on arrays or ShapeDtypeStructs. QTensor leaves (int8 codes +
+    per-row scale) inherit the parent parameter's rule — the scale's size-1
+    trailing dim fails divisibility and is auto-replicated.
+    """
+    mesh = mesh or _CTX.mesh
+
+    def one(path, leaf):
+        p = _path_str(path)
+        axes = param_logical_axes(p, leaf.ndim)
+        return logical_to_spec(axes, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def params_shardings(tree, mesh: Optional[Mesh] = None):
+    mesh = mesh or _CTX.mesh
+    specs = params_pspecs(tree, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Decode-state (KV cache / SSM state) sharding
+# ---------------------------------------------------------------------------
+
+
+def cache_logical_axes(path: str, ndim: int) -> Tuple[Optional[str], ...]:
+    """Logical axes for DecodeState leaves (leading dim = layer stack)."""
+    name = path.rsplit("/", 1)[-1]
+    table = {
+        # KVCache fields: [L, B, Hk, S, d] / [L, B, Hk, S] / [L, B]
+        "k": ("stack", "batch", "kv_heads", "slots", None),
+        "v": ("stack", "batch", "kv_heads", "slots", None),
+        "kq": ("stack", "batch", "kv_heads", "slots", None),
+        "kscale": ("stack", "batch", "kv_heads", "slots"),
+        "acc": ("stack", "batch", "kv_heads", "slots"),
+        "valid": ("stack", "batch", "kv_heads", "slots"),
+        "pos": ("stack", "batch", "kv_heads", "slots"),
+        "fill": ("stack", "batch"),
+        "step": ("stack", "batch"),
+        # SSMState: conv [L,B,K-1,C], ssm [L,B,H,P,N]
+        "conv": ("stack", "batch", None, "ff"),
+        "ssm": ("stack", "batch", "heads", None, None),
+    }
+    axes = table.get(name)
+    if axes is None or len(axes) != ndim:
+        return (None,) * ndim
+    return axes
+
+
+def decode_state_pspecs(tree, mesh: Optional[Mesh] = None):
+    """PartitionSpecs for a DecodeState pytree.
+
+    kv_heads shards over `model` when divisible; otherwise `slots` takes the
+    model axis (flash-decode style — softmax over a sharded slot axis, XLA
+    inserts the partial-max/sum collectives). For batch=1 long-context cells
+    every idle mesh axis is folded onto `slots`, so a 500k-slot cache spreads
+    over all 256/512 chips.
+    """
+    mesh = mesh or _CTX.mesh
+
+    def one(path, leaf):
+        p = _path_str(path)
+        axes = list(cache_logical_axes(p, leaf.ndim))
+        spec = logical_to_spec(axes, leaf.shape, mesh)
+        cols = list(spec) + [None] * (leaf.ndim - len(spec))
+        if mesh is not None and "slots" in axes:
+            i_s = axes.index("slots")
+            used = {c for c in cols if isinstance(c, str)}
+            for c in cols:
+                if isinstance(c, tuple):
+                    used.update(c)
+            combo = [cols[i_s]] if cols[i_s] else []
+            for ax in ("model", "data", "pod"):
+                if ax in used or ax not in mesh.shape:
+                    continue
+                factor = 1
+                for a in combo:
+                    factor *= mesh.shape[a]
+                if leaf.shape[i_s] % (factor * mesh.shape[ax]) == 0:
+                    combo.append(ax)
+                    used.add(ax)
+            cols[i_s] = tuple(combo) if len(combo) > 1 else (
+                combo[0] if combo else None)
+        while cols and cols[-1] is None:
+            cols.pop()
+        return P(*cols)
+
+    return jax.tree_util.tree_map_with_path(one, tree)

@@ -1,0 +1,212 @@
+"""Behavioural tests for UniCAIM attention: selection fidelity, decode
+equivalence with dense at full budget, prefill equals dense attention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import PruneConfig
+from repro.core import baselines
+from repro.core.attention import chunked_causal_attention, decode_attention
+from repro.core.cache import init_cache
+from repro.core.pruning import prefill_and_prune
+from repro.core.topk import exact_topk, gqa_group_scores, threshold_race
+
+jax.config.update("jax_platform_name", "cpu")
+
+B, Hq, Hk, d, N = 2, 4, 2, 32, 96
+
+
+def _qkv(seed, t=N):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, Hq, t, d))
+    k = jax.random.normal(ks[1], (B, Hk, t, d))
+    v = jax.random.normal(ks[2], (B, Hk, t, d))
+    return q, k, v
+
+
+def _ref_causal(q, k, v, scale=None):
+    t = q.shape[2]
+    g = Hq // Hk
+    scale = scale or 1.0 / np.sqrt(d)
+    qg = q.reshape(B, Hk, g, t, d)
+    logits = jnp.einsum("bhgtd,bhsd->bhgts", qg, k) * scale
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, -1)
+    out = jnp.einsum("bhgts,bhsd->bhgtd", p, v).reshape(B, Hq, t, d)
+    return out, p.reshape(B, Hk, g, t, t).sum(axis=(2, 3))
+
+
+@pytest.mark.parametrize("chunk", [16, 32, 96])
+def test_chunked_attention_matches_dense(chunk):
+    q, k, v = _qkv(0)
+    out, acc = chunked_causal_attention(q, k, v, chunk=chunk)
+    ref_out, ref_acc = _ref_causal(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(ref_acc),
+                               atol=1e-3)
+
+
+def test_obs_window_accumulation():
+    q, k, v = _qkv(1)
+    _, acc_all = chunked_causal_attention(q, k, v, chunk=32)
+    _, acc_win = chunked_causal_attention(q, k, v, chunk=32, obs_window=16)
+    # window accumulation is strictly smaller and only counts last 16 rows
+    assert (np.asarray(acc_win) <= np.asarray(acc_all) + 1e-6).all()
+    g = Hq // Hk   # acc sums the whole GQA group: 16 rows × g heads
+    assert np.asarray(acc_win).sum() == pytest.approx(16.0 * g * B * Hk,
+                                                      rel=1e-3)
+
+
+def test_decode_full_budget_topk_equals_dense():
+    """With select_k == slots and no quant loss (8-bit), UniCAIM decode
+    output must match dense attention over the same cache contents."""
+    prune_u = PruneConfig(policy="unicaim", heavy_budget=24, reserve=8,
+                          sink_tokens=2, recent_window=4, select_k=32,
+                          score_bits=8, query_bits=8)
+    prune_d = baselines.dense(32)
+    cu = init_cache(B, Hk, d, 32, prune_u, jnp.float32)
+    cd = init_cache(B, Hk, d, 32, prune_d, jnp.float32)
+    outs = []
+    for i in range(20):
+        ks = jax.random.split(jax.random.PRNGKey(100 + i), 3)
+        q1 = jax.random.normal(ks[0], (B, Hq, d))
+        k1 = jax.random.normal(ks[1], (B, Hk, d))
+        v1 = jax.random.normal(ks[2], (B, Hk, d))
+        cu, ou = decode_attention(cu, q1, k1, v1, prune_u)
+        cd, od = decode_attention(cd, q1, k1, v1, prune_d)
+        outs.append((np.asarray(ou), np.asarray(od)))
+    for ou, od in outs:
+        np.testing.assert_allclose(ou, od, atol=1e-4)
+
+
+def test_dynamic_selection_covers_true_topk():
+    """3-bit approximate top-k must overlap heavily with exact top-k."""
+    prune = PruneConfig(policy="unicaim", heavy_budget=56, reserve=8,
+                        sink_tokens=0, recent_window=1, select_k=16,
+                        score_bits=3, query_bits=4)
+    cache = init_cache(B, Hk, d, 64, prune, jnp.float32)
+    for i in range(64):
+        ks = jax.random.split(jax.random.PRNGKey(i), 3)
+        cache, _ = decode_attention(
+            cache, jax.random.normal(ks[0], (B, Hq, d)),
+            jax.random.normal(ks[1], (B, Hk, d)),
+            jax.random.normal(ks[2], (B, Hk, d)), prune)
+    q = jax.random.normal(jax.random.PRNGKey(999), (B, Hq, d))
+    exact = jnp.einsum("bhgd,bhsd->bhgs",
+                       q.reshape(B, Hk, Hq // Hk, d),
+                       cache.k).sum(axis=2)
+    from repro.core import quant, scoring
+    qq, qs = quant.quantize_query(q, 4)
+    approx = gqa_group_scores(
+        scoring.approx_scores(qq, qs, cache.kq, cache.kscale, cache.valid),
+        Hk)
+    _, ei = exact_topk(exact, 16)
+    _, ai = exact_topk(approx, 16)
+    overlaps = []
+    for b in range(B):
+        for h in range(Hk):
+            overlaps.append(len(set(np.asarray(ei[b, h]).tolist())
+                                & set(np.asarray(ai[b, h]).tolist())) / 16)
+    assert np.mean(overlaps) > 0.75, overlaps
+
+
+def test_threshold_race_selects_about_k():
+    scores = jax.random.normal(jax.random.PRNGKey(3), (B, Hk, 128))
+    for k in (8, 16, 32):
+        mask = threshold_race(scores, k, iters=12)
+        counts = np.asarray(mask.sum(-1))
+        assert (counts >= 1).all()
+        assert (np.abs(counts - k) <= max(3, k // 4)).all(), (k, counts)
+
+
+def test_threshold_mode_decode_runs():
+    prune = PruneConfig(policy="unicaim", heavy_budget=24, reserve=8,
+                        select_k=8, select_mode="threshold",
+                        sink_tokens=2, recent_window=4)
+    cache = init_cache(B, Hk, d, 32, prune, jnp.float32)
+    for i in range(10):
+        ks = jax.random.split(jax.random.PRNGKey(i), 3)
+        cache, out = decode_attention(
+            cache, jax.random.normal(ks[0], (B, Hq, d)),
+            jax.random.normal(ks[1], (B, Hk, d)),
+            jax.random.normal(ks[2], (B, Hk, d)), prune)
+        assert not np.isnan(np.asarray(out)).any()
+
+
+def test_prefill_and_prune_output_matches_dense():
+    prune = baselines.unicaim(heavy=48, reserve=16, select_k=16,
+                              sink_tokens=2, recent_window=8)
+    cache = init_cache(B, Hk, d, prune.slots, prune, jnp.float32)
+    q, k, v = _qkv(5)
+    cache, out = prefill_and_prune(cache, q, k, v, prune, chunk=32)
+    ref_out, _ = _ref_causal(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               atol=1e-4)
+
+
+def test_blocked_selection_full_budget_exact():
+    """select_blocks hierarchical selection is EXACT when k covers the
+    whole cache (distributed CAM race, §Perf optimization)."""
+    base = dict(policy="unicaim", heavy_budget=56, reserve=8,
+                sink_tokens=2, recent_window=4, score_bits=8, query_bits=8)
+    pr_blk = PruneConfig(select_k=64, select_blocks=4, **base)
+    pr_dense = baselines.dense(64)
+    cb = init_cache(B, Hk, d, 64, pr_blk, jnp.float32)
+    cd = init_cache(B, Hk, d, 64, pr_dense, jnp.float32)
+    for i in range(30):
+        ks = jax.random.split(jax.random.PRNGKey(i), 3)
+        q1 = jax.random.normal(ks[0], (B, Hq, d))
+        k1 = jax.random.normal(ks[1], (B, Hk, d))
+        v1 = jax.random.normal(ks[2], (B, Hk, d))
+        cb, ob = decode_attention(cb, q1, k1, v1, pr_blk)
+        cd, od = decode_attention(cd, q1, k1, v1, pr_dense)
+        np.testing.assert_allclose(np.asarray(ob), np.asarray(od),
+                                   atol=1e-4)
+
+
+def test_blocked_selection_tracks_global():
+    """At half budget, block-local top-k stays close to global top-k."""
+    base = dict(policy="unicaim", heavy_budget=56, reserve=8,
+                sink_tokens=2, recent_window=4, score_bits=8, query_bits=8)
+    pr_g = PruneConfig(select_k=32, select_blocks=1, **base)
+    pr_b = PruneConfig(select_k=32, select_blocks=4, **base)
+    cg = init_cache(B, Hk, d, 64, pr_g, jnp.float32)
+    cb = init_cache(B, Hk, d, 64, pr_b, jnp.float32)
+    errs = []
+    for i in range(60):
+        ks = jax.random.split(jax.random.PRNGKey(i), 3)
+        q1 = jax.random.normal(ks[0], (B, Hq, d))
+        k1 = jax.random.normal(ks[1], (B, Hk, d))
+        v1 = jax.random.normal(ks[2], (B, Hk, d))
+        cg, og = decode_attention(cg, q1, k1, v1, pr_g)
+        cb, ob = decode_attention(cb, q1, k1, v1, pr_b)
+        errs.append(float(jnp.mean(jnp.abs(og - ob))))
+    assert np.mean(errs) < 0.15, np.mean(errs)
+
+
+def test_int8_kv_cache_drift_small():
+    """int8 KV storage (§Perf memory knob; paper-faithful low-bit cells)
+    changes decode outputs only marginally and removes the mirror copy."""
+    base = dict(policy="unicaim", heavy_budget=56, reserve=8,
+                sink_tokens=2, recent_window=4, select_k=32, query_bits=8)
+    p_bf = PruneConfig(score_bits=8, **base)
+    p_i8 = PruneConfig(score_bits=8, kv_dtype="int8", **base)
+    c_bf = init_cache(B, Hk, d, 64, p_bf, jnp.float32)
+    c_i8 = init_cache(B, Hk, d, 64, p_i8)
+    assert c_i8.k.dtype == jnp.int8 and c_i8.kq is None
+    errs = []
+    for i in range(40):
+        ks = jax.random.split(jax.random.PRNGKey(i), 3)
+        q1 = jax.random.normal(ks[0], (B, Hq, d))
+        k1 = jax.random.normal(ks[1], (B, Hk, d))
+        v1 = jax.random.normal(ks[2], (B, Hk, d))
+        c_bf, o1 = decode_attention(c_bf, q1, k1, v1, p_bf)
+        c_i8, o2 = decode_attention(c_i8, q1, k1, v1, p_i8)
+        errs.append(float(jnp.mean(jnp.abs(o1 - o2))))
+    assert np.mean(errs) < 0.01, np.mean(errs)
+    bytes_bf = sum(x.nbytes for x in jax.tree.leaves(c_bf))
+    bytes_i8 = sum(x.nbytes for x in jax.tree.leaves(c_i8))
+    assert bytes_i8 < bytes_bf / 2

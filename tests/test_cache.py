@@ -1,0 +1,127 @@
+"""Cache invariants: fixed-size, protection, in-place eviction (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import PruneConfig
+from repro.core import baselines
+from repro.core.cache import (evictable_mask, init_cache, prefill_fill,
+                              protected_mask, write_token)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _mk(policy="unicaim", slots=32, sink=2, recent=4, B=2, Hk=2, d=8):
+    prune = PruneConfig(policy=policy, heavy_budget=slots - 8, reserve=8,
+                        sink_tokens=sink, recent_window=recent,
+                        select_k=8, score_bits=3)
+    cache = init_cache(B, Hk, d, prune.slots, prune, dtype=jnp.float32)
+    return prune, cache
+
+
+def _write_n(cache, prune, n, seed=0):
+    for i in range(n):
+        k = jax.random.normal(jax.random.PRNGKey(seed * 997 + i),
+                              (cache.k.shape[0], cache.k.shape[1],
+                               cache.k.shape[3]))
+        cache = write_token(cache, k, k + 1.0, prune)
+    return cache
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 70), st.sampled_from(["unicaim", "h2o", "streaming"]))
+def test_property_fixed_size_never_exceeded(n_tokens, policy):
+    prune, cache = _mk(policy)
+    cache = _write_n(cache, prune, n_tokens)
+    valid_per_head = np.asarray(cache.valid.sum(axis=-1))
+    assert (valid_per_head <= prune.slots).all()
+    assert (np.asarray(cache.fill) == min(n_tokens, prune.slots)).all()
+    assert (np.asarray(cache.step) == n_tokens).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(40, 80))
+def test_property_sinks_never_evicted(n_tokens):
+    prune, cache = _mk("unicaim", sink=3)
+    cache = _write_n(cache, prune, n_tokens)
+    pos = np.asarray(cache.pos)
+    for b in range(pos.shape[0]):
+        for h in range(pos.shape[1]):
+            kept = set(pos[b, h][pos[b, h] >= 0].tolist())
+            assert {0, 1, 2} <= kept, f"sinks evicted: {sorted(kept)[:6]}"
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(40, 80), st.integers(2, 8))
+def test_property_recent_window_kept(n_tokens, recent):
+    prune, cache = _mk("unicaim", recent=recent)
+    cache = _write_n(cache, prune, n_tokens)
+    pos = np.asarray(cache.pos)
+    for b in range(pos.shape[0]):
+        for h in range(pos.shape[1]):
+            kept = set(pos[b, h][pos[b, h] >= 0].tolist())
+            want = set(range(max(0, n_tokens - recent), n_tokens))
+            assert want <= kept
+
+
+def test_eviction_targets_lowest_accumulated_score():
+    prune, cache = _mk("h2o", slots=16, sink=0, recent=1)
+    cache = _write_n(cache, prune, 16)             # full
+    # plant known accumulated scores: slot 5 lowest
+    acc = np.arange(16, dtype=np.float32)[None, None, :] + 10.0
+    acc[:, :, 5] = 0.1
+    cache = cache._replace(acc=jnp.asarray(np.broadcast_to(acc, cache.acc.shape)))
+    evicted_pos = int(cache.pos[0, 0, 5])
+    k = jnp.ones((2, 2, 8))
+    cache2 = write_token(cache, k, k, prune)
+    assert int(cache2.pos[0, 0, 5]) == 16           # new token in slot 5
+    pos_now = set(np.asarray(cache2.pos[0, 0]).tolist())
+    assert evicted_pos not in pos_now
+
+
+def test_streaming_ring_eviction_is_positional():
+    prune, cache = _mk("streaming", slots=16, sink=2)
+    cache = _write_n(cache, prune, 30)
+    pos = np.asarray(cache.pos[0, 0])
+    kept = set(pos[pos >= 0].tolist())
+    assert {0, 1} <= kept                           # sinks
+    # the most recent window tokens are all present
+    assert set(range(30 - 14, 30)) <= kept
+
+
+def test_prefill_fill_selects_heavy_tokens():
+    prune, cache = _mk("unicaim", slots=32, sink=2, recent=4)
+    B, Hk, N, d = 2, 2, 64, 8
+    k = jax.random.normal(jax.random.PRNGKey(0), (B, Hk, N, d))
+    v = k * 2
+    acc = jax.random.uniform(jax.random.PRNGKey(1), (B, Hk, N))
+    cache = prefill_fill(cache, k, v, acc, prune)
+    keep = prune.heavy_budget
+    assert (np.asarray(cache.fill) == keep).all()
+    accn = np.asarray(acc)
+    pos = np.asarray(cache.pos)
+    for b in range(B):
+        for h in range(Hk):
+            chosen = pos[b, h][pos[b, h] >= 0]
+            # forced: sinks + recent
+            assert {0, 1} <= set(chosen.tolist())
+            assert set(range(N - 4, N)) <= set(chosen.tolist())
+            # the rest are the top scorers among free positions
+            free = [i for i in range(N)
+                    if i >= 2 and i < N - 4]
+            free_sorted = sorted(free, key=lambda i: -accn[b, h, i])
+            n_free = keep - 2 - 4
+            expect = set(free_sorted[:n_free]) | {0, 1} | set(range(N - 4, N))
+            assert set(chosen.tolist()) == expect
+
+
+def test_protected_evictable_partition():
+    prune, cache = _mk("unicaim")
+    cache = _write_n(cache, prune, 40)
+    prot = np.asarray(protected_mask(cache, prune))
+    evict = np.asarray(evictable_mask(cache, prune))
+    valid = np.asarray(cache.valid)
+    assert not (prot & evict).any()
+    assert ((prot | evict) == valid).all()

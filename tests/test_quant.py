@@ -1,0 +1,79 @@
+"""Unit + property tests for signed multibit quantization (the CAM cell)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 4, 5, 8])
+def test_quantize_roundtrip_error_bound(bits):
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 64))
+    q, s = quant.quantize(x, bits)
+    xhat = quant.dequantize(q, s)
+    if bits == 1:
+        # sign quantization preserves sign wherever the scale is positive
+        assert jnp.all((xhat >= 0) == (x >= 0) | (jnp.abs(x) < 1e-7))
+    else:
+        qm = quant.qmax_for_bits(bits)
+        amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+        assert jnp.all(jnp.abs(xhat - x) <= amax / qm * 0.5 + 1e-6)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+def test_quantize_codes_in_range(bits):
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 32)) * 100
+    q, _ = quant.quantize(x, bits)
+    qm = quant.qmax_for_bits(bits)
+    assert int(jnp.max(q)) <= qm and int(jnp.min(q)) >= -qm
+
+
+def test_pack_unpack_int4_roundtrip():
+    q = jax.random.randint(jax.random.PRNGKey(2), (3, 5, 32), -8, 8,
+                           jnp.int8)
+    packed = quant.pack_int4(q)
+    assert packed.shape == (3, 5, 16)
+    assert jnp.array_equal(quant.unpack_int4(packed), q)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 7),
+       st.floats(0.1, 100.0))
+def test_property_dot_product_preserved(bits, dim_pow, scale):
+    """Quantized score correlates with exact score (the CAM guarantee)."""
+    d = 2 ** dim_pow
+    key = jax.random.PRNGKey(bits * 100 + dim_pow)
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (d,)) * scale
+    b = jax.random.normal(k2, (d,)) * scale
+    qa, sa = quant.quantize(a[None], bits)
+    qb, sb = quant.quantize(b[None], bits)
+    approx = float(jnp.sum(qa[0].astype(jnp.int32) * qb[0].astype(jnp.int32))
+                   * sa[0] * sb[0])
+    exact = float(jnp.dot(a, b))
+    qm = quant.qmax_for_bits(bits)
+    # per-element error ≤ 0.5 step on each side → bounded bilinear error
+    bound = (float(jnp.max(jnp.abs(a))) * float(jnp.max(jnp.abs(b)))
+             * d * (1.2 / qm + 0.3 / qm ** 2)) + 1e-3
+    assert abs(approx - exact) <= bound
+
+
+def test_mirror_bytes():
+    assert quant.mirror_bytes_per_token(128, 3) == 64 + 4   # packed nibbles
+    assert quant.mirror_bytes_per_token(128, 8) == 128 + 4
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 8))
+def test_property_scale_invariance(bits):
+    """quantize(c·x) has codes equal to quantize(x) (symmetric scheme)."""
+    x = jax.random.normal(jax.random.PRNGKey(7), (4, 32))
+    q1, s1 = quant.quantize(x, bits)
+    q2, s2 = quant.quantize(x * 3.0, bits)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s1) * 3.0,
+                               rtol=1e-5)

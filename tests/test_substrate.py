@@ -1,0 +1,140 @@
+"""Substrate tests: optimizer (incl. int8 states), schedules, gradient
+compression, data pipeline, checkpoint manager."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataPipeline, MemmapSource, SyntheticSource
+from repro.optim import adamw, compression, schedule
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _quad_problem():
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros((3,)), "b": jnp.zeros((4, 8))}
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2) + jnp.sum(p["b"] ** 2)
+    return params, loss, target
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+def test_adamw_converges(quantized):
+    params, loss, target = _quad_problem()
+    cfg = adamw.AdamWConfig(lr=0.05, weight_decay=0.0,
+                            quantized_state=quantized)
+    state = adamw.init(params, cfg)
+    step = jax.jit(lambda p, s: adamw.update(jax.grad(loss)(p), s, p, cfg))
+    for _ in range(300):
+        params, state = step(params, state)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.05)
+    assert float(jnp.abs(params["b"]).max()) < 0.05
+
+
+def test_adamw_quantized_state_bytes():
+    params = {"w": jnp.zeros((256, 256))}
+    st_q = adamw.init(params, adamw.AdamWConfig(quantized_state=True))
+    st_f = adamw.init(params, adamw.AdamWConfig(quantized_state=False))
+    q_bytes = sum(x.nbytes for x in jax.tree.leaves(st_q.m))
+    f_bytes = sum(x.nbytes for x in jax.tree.leaves(st_f.m))
+    assert q_bytes < f_bytes / 3.5          # ~int8 + per-row scale
+
+
+def test_grad_clip_limits_update():
+    params = {"w": jnp.zeros((4,))}
+    cfg = adamw.AdamWConfig(lr=1.0, grad_clip=1e-3, weight_decay=0.0)
+    state = adamw.init(params, cfg)
+    huge = {"w": jnp.full((4,), 1e9)}
+    new, _ = adamw.update(huge, state, params, cfg)
+    assert float(jnp.abs(new["w"]).max()) < 10.0
+
+
+def test_warmup_cosine_shape():
+    s = jnp.arange(0, 1000)
+    lr = schedule.warmup_cosine(s, 1e-3, warmup=100, total=1000)
+    assert 0.0 < float(lr[0]) <= 1.01e-5    # warm but never a zero step
+    assert float(lr[99]) <= 1e-3 * 1.0001
+    assert float(lr[100]) == pytest.approx(1e-3, rel=1e-3)
+    assert float(lr[-1]) < 3e-4             # decayed toward the floor
+
+
+def test_gradient_compression_error_feedback():
+    grads = {"a": jax.random.normal(jax.random.PRNGKey(0), (64, 32)),
+             "b": jax.random.normal(jax.random.PRNGKey(1), (128,))}
+    ef = compression.init_error_feedback(grads)
+    (q, s), ef2 = compression.compress_with_feedback(grads, ef)
+    deq = jax.tree.map(compression.dequantize_grad, q, s)
+    # feedback holds exactly the quantization residual
+    for k in grads:
+        np.testing.assert_allclose(
+            np.asarray(grads[k] - deq[k]), np.asarray(ef2.residual[k]),
+            atol=1e-6)
+    # next-step compression re-injects the residual → bias-free on average
+    (q2, s2), ef3 = compression.compress_with_feedback(grads, ef2)
+    deq2 = jax.tree.map(compression.dequantize_grad, q2, s2)
+    two_step = jax.tree.map(lambda a, b: a + b, deq, deq2)
+    for k in grads:
+        np.testing.assert_allclose(np.asarray(two_step[k]) / 2.0,
+                                   np.asarray(grads[k]),
+                                   atol=float(jnp.abs(grads[k]).max()) / 100)
+
+
+def test_synthetic_source_deterministic():
+    src = SyntheticSource(vocab_size=100, seq_len=32, seed=3)
+    a = src.batch(7, 4)
+    b = src.batch(7, 4)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (4, 32)
+    assert a.min() >= 0 and a.max() < 100
+    assert not np.array_equal(a, src.batch(8, 4))
+
+
+def test_memmap_source(tmp_path):
+    path = os.path.join(tmp_path, "toks.bin")
+    np.arange(10000, dtype=np.uint16).tofile(path)
+    src = MemmapSource(path, seq_len=64)
+    b = src.batch(0, 3)
+    assert b.shape == (3, 64)
+    # windows are contiguous slices of the file
+    assert (np.diff(b, axis=1) == 1).all()
+
+
+def test_pipeline_prefetch_and_shard_slice(tmp_path):
+    src = SyntheticSource(50, 16, seed=0)
+    pipe = DataPipeline(src, global_batch=8, process_index=1,
+                        process_count=2)
+    batch = next(pipe)
+    assert batch["tokens"].shape == (4, 16)
+    full = src.batch(0, 8)
+    np.testing.assert_array_equal(np.asarray(batch["tokens"]), full[4:])
+    pipe.close()
+
+
+def test_checkpoint_roundtrip_and_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    state = {"w": jnp.arange(6.0).reshape(2, 3),
+             "opt": {"m": jnp.ones((4,)), "step": jnp.asarray(3)}}
+    for s in (10, 20, 30):
+        mgr.save(s, jax.tree.map(lambda x: x + s, state), block=True)
+    assert mgr.all_steps() == [20, 30]       # retention pruned step 10
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        state)
+    out = mgr.restore(30, like)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.asarray(state["w"]) + 30)
+
+
+def test_checkpoint_atomic_no_partial(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    state = {"w": jnp.ones((8,))}
+    mgr.save(5, state, block=True)
+    # a .tmp dir must never be visible as a restorable step
+    assert mgr.all_steps() == [5]
+    for name in os.listdir(tmp_path):
+        assert not name.endswith(".tmp")
