@@ -10,11 +10,13 @@ sweep as Table II. Also measures real CPU wall time as a sanity proxy.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
+from benchmarks import common
 from benchmarks.common import emit, time_fn
-from repro.configs.base import PruneConfig
 from repro.core import baselines
 from repro.core.attention import decode_attention
 from repro.core.cache import init_cache
@@ -42,10 +44,12 @@ def step_flops(n_attend: int, n_scored: int) -> int:
 
 def run():
     results = {}
-    for label, ratio in (("no_prune", 0.0), ("prune50", 0.5),
-                         ("prune80", 0.8)):
+    labels = (("no_prune", 0.0), ("prune50", 0.5)) if common.SMOKE else \
+        (("no_prune", 0.0), ("prune50", 0.5), ("prune80", 0.8))
+    modes = (("1bit", 1),) if common.SMOKE else (("1bit", 1), ("3bit", 3))
+    for label, ratio in labels:
         keep = int(SEQ * (1 - ratio)) or 1
-        for mode, bits in (("1bit", 1), ("3bit", 3)):
+        for mode, bits in modes:
             if label == "no_prune":
                 prune = baselines.dense(SEQ)
                 n_attend, n_scored = SEQ, 0
@@ -75,12 +79,24 @@ def run():
             for i in range(8):
                 c, _ = fn(c, q, kn, vn)
             us = time_fn(lambda: fn(c, q, kn, vn))
+            fused_note = ""
+            if prune.policy == "unicaim":
+                # same step through the fused single-pass engine
+                pf = dataclasses.replace(prune, fused=True)
+                ffn = jax.jit(lambda c, q, k, v, p=pf:
+                              decode_attention(c, q, k, v, p))
+                cf = init_cache(B, HK, D, pf.slots, pf, jnp.float32)
+                for i in range(8):
+                    cf, _ = ffn(cf, q, kn, vn)
+                us_f = time_fn(lambda: ffn(cf, q, kn, vn))
+                fused_note = (f";fused_us={us_f:.1f}"
+                              f";fused_speedup={us / us_f:.2f}x")
             results[(label, mode)] = aedp
             base = results.get(("no_prune", "1bit"), aedp)
             emit(f"aedp_{label}_{mode}", us,
                  f"aedp_reduction_vs_dense={base / aedp:.1f}x;"
                  f"resident_B={resident};moved_B={moved};"
-                 f"delay_us={delay * 1e6:.3f}")
+                 f"delay_us={delay * 1e6:.3f}" + fused_note)
             if label == "no_prune":
                 break   # dense is bit-independent
 

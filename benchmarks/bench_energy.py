@@ -5,7 +5,6 @@ mirroring the paper's 5.3×→27× energy-efficiency trend."""
 from __future__ import annotations
 
 from benchmarks.common import emit
-from repro.core import baselines
 from repro.core.quant import mirror_bytes_per_token
 
 HK, HQ, D = 8, 32, 128

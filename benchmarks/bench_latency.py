@@ -1,13 +1,19 @@
-"""Paper Fig. 12 — decode latency. Two views:
-  * measured CPU wall-time per decode attention step (dense vs UniCAIM)
-    at growing context — the paper's 'delay' with real code;
+"""Paper Fig. 12 — decode latency. Three views:
+  * measured CPU wall-time per decode attention step (dense vs UniCAIM
+    composed vs the fused single-pass engine) at growing context — the
+    paper's 'delay' with real code;
+  * scan-amortized step time: 32 decode steps in one lax.scan dispatch,
+    the serving path's per-token cost without Python dispatch overhead;
   * derived v5e roofline latency (memory term dominates decode).
 The paper's ADC-count serialization has no TPU analog (DESIGN.md §7)."""
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
+from benchmarks import common
 from benchmarks.common import emit, time_fn
 from repro.core import baselines
 from repro.core.attention import decode_attention
@@ -15,29 +21,48 @@ from repro.core.cache import init_cache
 from repro.launch.roofline import HBM_BW
 
 B, HK, HQ, D = 2, 4, 8, 64
+SCAN_STEPS = 32
+
+
+def _step_fn(prune):
+    return jax.jit(lambda c, q, k, v: decode_attention(c, q, k, v, prune))
+
+
+def _scan_fn(prune):
+    def run(cache, q, k, v):
+        def body(c, _):
+            c, o = decode_attention(c, q, k, v, prune)
+            return c, o
+        return jax.lax.scan(body, cache, None, length=SCAN_STEPS)
+    return jax.jit(run)
 
 
 def run():
-    for ctx in (512, 1024, 2048, 4096):
+    ctxs = (512,) if common.SMOKE else (512, 1024, 2048, 4096)
+    for ctx in ctxs:
         budget = 576
         dense = baselines.dense(ctx)
         uni = baselines.unicaim(heavy=budget - 64, reserve=64, select_k=64,
                                 score_bits=3, sink_tokens=2,
                                 recent_window=8)
+        fused = dataclasses.replace(uni, fused=True)
         rows = {}
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (B, HQ, D))
+        kn = jax.random.normal(ks[1], (B, HK, D))
+        vn = jax.random.normal(ks[2], (B, HK, D))
         for name, prune, slots in (("dense", dense, ctx),
-                                   ("unicaim", uni, uni.slots)):
+                                   ("unicaim", uni, uni.slots),
+                                   ("fused", fused, fused.slots)):
             cache = init_cache(B, HK, D, slots, prune, jnp.float32)
-            fn = jax.jit(lambda c, q, k, v, p=prune:
-                         decode_attention(c, q, k, v, p))
-            ks = jax.random.split(jax.random.PRNGKey(0), 3)
-            q = jax.random.normal(ks[0], (B, HQ, D))
-            kn = jax.random.normal(ks[1], (B, HK, D))
-            vn = jax.random.normal(ks[2], (B, HK, D))
+            fn = _step_fn(prune)
             c = cache
             for _ in range(min(slots + 8, 600) // 8):
                 c, _ = fn(c, q, kn, vn)   # fill
             us = time_fn(lambda: fn(c, q, kn, vn))
+            # scan-amortized per-step time (single dispatch for 32 steps)
+            scan = _scan_fn(prune)
+            us_scan = time_fn(lambda: scan(c, q, kn, vn)) / SCAN_STEPS
             # v5e derived latency: bytes moved / HBM bandwidth
             if name == "dense":
                 bytes_moved = 2 * ctx * HK * D * 2
@@ -46,12 +71,16 @@ def run():
                 bytes_moved = (min(ctx, uni.slots) * HK
                                * mirror_bytes_per_token(D, 3)
                                + 2 * uni.select_k * HK * D * 2)
-            rows[name] = (us, bytes_moved / HBM_BW * 1e6)
+            rows[name] = (us, us_scan, bytes_moved / HBM_BW * 1e6)
             emit(f"latency_{name}_ctx{ctx}", us,
-                 f"v5e_us={rows[name][1]:.2f}")
+                 f"scan_us={us_scan:.2f};v5e_us={rows[name][2]:.2f}")
         emit(f"latency_speedup_ctx{ctx}", 0.0,
              f"measured={rows['dense'][0] / rows['unicaim'][0]:.2f}x;"
-             f"v5e_derived={rows['dense'][1] / rows['unicaim'][1]:.2f}x")
+             f"v5e_derived={rows['dense'][2] / rows['unicaim'][2]:.2f}x")
+        emit(f"latency_fused_speedup_ctx{ctx}", 0.0,
+             f"fused_vs_composed={rows['unicaim'][0] / rows['fused'][0]:.2f}x;"
+             f"scan={rows['unicaim'][1] / rows['fused'][1]:.2f}x;"
+             f"scan_vs_perstep={rows['fused'][0] / rows['fused'][1]:.2f}x")
 
 
 if __name__ == "__main__":

@@ -7,6 +7,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# CI smoke mode: benches read this to shrink their sweep (set by
+# `benchmarks/run.py --smoke`).
+SMOKE = False
+
+
+def set_smoke(on: bool = True) -> None:
+    global SMOKE
+    SMOKE = on
+
 
 def time_fn(fn, *args, warmup=2, iters=5):
     """Median wall-time (µs) of a jitted callable."""

@@ -15,12 +15,22 @@ BENCHES = ("aedp", "footprint", "energy", "latency", "fidelity",
            "accuracy", "needle")
 
 
+SMOKE_BENCHES = ("aedp", "latency")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help=f"comma list from {BENCHES}")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CI sweep: "
+                         f"{SMOKE_BENCHES} with shrunk configs")
     args = ap.parse_args(argv)
-    wanted = args.only.split(",") if args.only else list(BENCHES)
+    if args.smoke:
+        from benchmarks import common
+        common.set_smoke(True)
+    wanted = (args.only.split(",") if args.only
+              else list(SMOKE_BENCHES) if args.smoke else list(BENCHES))
     print("name,us_per_call,derived")
     for name in wanted:
         mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])

@@ -9,7 +9,6 @@ Run:  PYTHONPATH=src python examples/long_context_serving.py
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_config, reduced

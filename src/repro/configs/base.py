@@ -10,7 +10,7 @@ Configs are frozen dataclasses so they hash (usable as jit static args).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------
@@ -55,6 +55,12 @@ class PruneConfig:
     #     the scoring mirror (no separate copy). Halves cache bytes AND the
     #     CAM-pass reads. §Perf/memory knob for long-context decode. ---
     kv_dtype: str = "bf16"       # 'bf16' | 'int8' (unicaim policy only)
+    # --- fused single-pass decode engine (kernels/fused_decode.py):
+    #     scoring, block-local selection, winner gather, and exact
+    #     attention in one kernel/XLA region instead of the composed
+    #     three-pass flow. The composed path stays as the oracle. ---
+    fused: bool = False
+    fused_backend: str = "auto"  # 'auto' | 'pallas' | 'xla'
     # --- charge-domain accumulation ---
     accumulate: str = "approx"   # 'approx' (same-cycle, paper) | 'exact'
     acc_decay: float = 1.0       # optional exponential decay of history
@@ -72,6 +78,7 @@ class PruneConfig:
         assert 1 <= self.score_bits <= 8
         assert 1 <= self.query_bits <= 8
         assert self.select_mode in ("topk", "threshold")
+        assert self.fused_backend in ("auto", "pallas", "xla")
         assert self.accumulate in ("approx", "exact")
         assert self.select_k <= self.slots
         assert self.sink_tokens + self.recent_window < self.slots

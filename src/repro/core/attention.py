@@ -145,8 +145,9 @@ def _blocked_attend_shardmap(cache: KVCache, q: jax.Array,
     distributed form of the paper's per-array CAM race. Requires
     select_blocks == mesh model-axis size.
     """
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.runtime.compat import shard_map
 
     b, hq, d = q.shape
     hk = cache.k.shape[1]
@@ -205,6 +206,65 @@ def _blocked_attend_shardmap(cache: KVCache, q: jax.Array,
     return out.reshape(b, hq, -1)
 
 
+def _fused_eligible(cache: KVCache, prune: PruneConfig) -> bool:
+    """The fused engine covers the paper-default decode configuration;
+    anything it doesn't (threshold race, exact accumulation, MLA latent
+    caches, slot-sharded meshes) falls back to the composed oracle path."""
+    if not (prune.fused and prune.policy == "unicaim"):
+        return False
+    if prune.select_mode != "topk" or prune.accumulate != "approx":
+        return False
+    if cache.v is None:                       # MLA latent cache
+        return False
+    nb = max(1, prune.select_blocks)
+    if prune.select_k % nb:
+        return False
+    from repro.runtime.sharding import active_mesh
+    # under any mesh the composed path owns distribution (shard constraint
+    # re-pinning / the shard_map race); the fused kernel is unsharded and
+    # would force GSPMD to all-gather the cache around the pallas_call
+    return active_mesh() is None
+
+
+def _fused_decode_attend(cache: KVCache, q: jax.Array, prune: PruneConfig
+                         ) -> Tuple[KVCache, jax.Array]:
+    """Single-pass fused engine: one kernel (or one fused XLA region) does
+    CAM scoring over the mirror, block-local selection, winner-only
+    gather, exact attention, AND emits the charge-domain accumulation
+    probabilities — no [B,Hq,S] scores or index tensors between passes."""
+    from repro.kernels import ops
+
+    b, hq, d = q.shape
+    hk = cache.k.shape[1]
+    g = hq // hk
+    s = cache.slots
+    dv = cache.v.shape[-1]
+    qq, qs = quant.quantize_query(q, prune.query_bits)
+    mirror = cache.kq if cache.kq is not None else cache.k
+    if cache.quantized_kv:
+        kscale, vscale = cache.kscale, cache.vscale
+    else:
+        kscale = jnp.ones((b, hk, s), jnp.float32)
+        vscale = kscale
+    prot = protected_mask(cache, prune)
+
+    def bhf(x):                               # [B, Hk, ...] → [B·Hk, ...]
+        return x.reshape((b * hk,) + x.shape[2:])
+
+    out, probs = ops.fused_decode(
+        q.reshape(b, hk, g, d).reshape(b * hk, g, d),
+        qq.reshape(b, hk, g, d).reshape(b * hk, g, d),
+        qs.reshape(b * hk, g),
+        bhf(mirror), bhf(cache.kscale), bhf(kscale), bhf(vscale),
+        bhf(cache.valid.astype(jnp.int8)), bhf(prot.astype(jnp.int8)),
+        bhf(cache.k), bhf(cache.v),
+        select_k=prune.select_k, num_blocks=max(1, prune.select_blocks),
+        backend=prune.fused_backend)
+    out = out.reshape(b, hk, g, dv).reshape(b, hq, dv)
+    acc = cache.acc * prune.acc_decay + probs.reshape(b, hk, s)
+    return cache._replace(acc=acc), out
+
+
 def decode_attention(cache: KVCache, q: jax.Array, k_new: jax.Array,
                      v_new: jax.Array, prune: PruneConfig,
                      ) -> Tuple[KVCache, jax.Array]:
@@ -228,6 +288,9 @@ def decode_attention(cache: KVCache, q: jax.Array, k_new: jax.Array,
         return cache._replace(acc=acc), out
 
     # ---- unicaim ----
+    if _fused_eligible(cache, prune):
+        return _fused_decode_attend(cache, q, prune)
+
     b, hq, _ = q.shape
     hk = cache.k.shape[1]
     # CAM mode: approximate scores over the quantized mirror (in int8-KV

@@ -1,0 +1,244 @@
+"""Pallas TPU kernel — the fused single-pass pruned-decode engine.
+
+One kernel per (batch·kv-head, slot-block) grid cell runs the whole UniCAIM
+decode pipeline that `core/attention.py` otherwise composes from three
+passes (approx_score → top-k → gather_attention):
+
+  1. CAM mode     — int8 scores for the block's slots from the quantized
+                    key mirror (the mirror's ONLY HBM read),
+  2. CAM race     — block-local top-k selection entirely in VMEM
+                    (iterative argmax; protected slots always win),
+  3. current mode — per-winner DMA of the K/V rows from HBM and the exact
+                    online-softmax attention contraction across blocks,
+  4. charge mode  — per-slot approximate probabilities (the accumulated-
+                    score update) emitted from the score scratch at the
+                    last block.
+
+Nothing round-trips HBM between the stages: the [B,Hq,S] score tensor and
+[B,Hk,nb,k] index tensor of the composed path never materialize, and the
+unselected bf16/int8 K/V rows are never touched — K and V live in ANY
+(HBM) memory space and only the k_loc winners per block are DMA'd.
+
+Selection semantics match the composed path: with num_blocks == 1 this is
+the global `exact_topk`; with num_blocks == nb it is the hierarchical
+per-block race of `select_blocks = nb` (`_gathered_attend_blocked`).
+
+  q      [BH, G, d]   storage dtype   exact queries (GQA group per kv head)
+  qq     [BH, G, d]   int8            quantized queries (CAM drive lines)
+  qscale [BH, G]      f32
+  mirror [BH, S, d]   int8            key mirror (int8-KV mode: K itself)
+  mscale [BH, S]      f32             mirror dequant scale
+  kscale [BH, S]      f32             K-row dequant scale (ones for bf16)
+  vscale [BH, S]      f32             V-row dequant scale (ones for bf16)
+  valid  [BH, S]      int8
+  prot   [BH, S]      int8            protected (sinks + recent): race bias
+  k      [BH, S, d]   ANY/HBM        exact keys   — winners DMA'd only
+  v      [BH, S, dv]  ANY/HBM        exact values — winners DMA'd only
+  out    [BH, G, dv]  f32
+  probs  [BH, S]      f32            Σ_g softmax_g(scores/√d) — acc update
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+# Selection-score sentinels. Invalid slots carry G·NEG_INF after the group
+# sum, so the "already picked" marker must sit strictly below any of them
+# for the race to pick distinct slots exactly like lax.top_k.
+PROT_WIN = 1e30
+PICKED = -1e35
+
+
+def _fused_decode_kernel(q_ref, qq_ref, qs_ref, mir_ref, ms_ref, ks_ref,
+                         vs_ref, valid_ref, prot_ref, k_any, v_any,
+                         out_ref, probs_ref,
+                         score_buf, m_sc, l_sc, o_sc, ksel, vsel, sem,
+                         *, nb, bs, k_loc, scale):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        o_sc[...] = jnp.zeros_like(o_sc)
+
+    # -- CAM mode: score this slot block against the whole query group --
+    qqf = qq_ref[0].astype(jnp.float32)                    # [G, d]
+    mir = mir_ref[0].astype(jnp.float32)                   # [bs, d]
+    raw = jax.lax.dot_general(
+        qqf, mir, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                # [G, bs]
+    raw = raw * qs_ref[0][:, None] * ms_ref[0][None, :]
+    validb = valid_ref[0][None, :] != 0                    # [1, bs]
+    raw = jnp.where(validb, raw, NEG_INF)
+    score_buf[:, pl.ds(j * bs, bs)] = raw
+
+    # -- CAM race: block-local top-k on the group-summed biased scores --
+    ssel = jnp.sum(raw, axis=0, keepdims=True)             # [1, bs]
+    ssel = jnp.where(prot_ref[0][None, :] != 0, PROT_WIN, ssel)
+    iota_s = jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (k_loc, 1), 0)
+    base = j * bs
+
+    def _copies(slot_idx, t):
+        """DMA descriptors for winner `slot_idx` → gather row `t`."""
+        return (pltpu.make_async_copy(k_any.at[i, pl.ds(base + slot_idx, 1)],
+                                      ksel.at[pl.ds(t, 1)], sem.at[0]),
+                pltpu.make_async_copy(v_any.at[i, pl.ds(base + slot_idx, 1)],
+                                      vsel.at[pl.ds(t, 1)], sem.at[1]))
+
+    def select_one(t, carry):
+        sc, onehot, prev = carry
+        idx = jnp.argmax(sc).astype(jnp.int32)             # first max wins
+        row = iota_s == idx                                # [1, bs]
+        onehot = onehot + jnp.where((iota_k == t) & row, 1.0, 0.0)
+        # depth-1 DMA pipeline: winner t-1's rows fly while t is argmax'd;
+        # drain them before reusing the semaphore pair for winner t
+        @pl.when(t > 0)
+        def _drain_prev():
+            for cp in _copies(prev, t - 1):
+                cp.wait()
+
+        for cp in _copies(idx, t):
+            cp.start()
+        return jnp.where(row, PICKED, sc), onehot, idx
+
+    carry0 = (ssel, jnp.zeros((k_loc, bs), jnp.float32), jnp.int32(0))
+    _, onehot, last = jax.lax.fori_loop(0, k_loc, select_one, carry0)
+    for cp in _copies(last, k_loc - 1):                    # final winner
+        cp.wait()
+
+    # winner metadata rides the one-hot matmul (bytes ≪ the skipped rows)
+    sel_ks = jax.lax.dot(onehot, ks_ref[0][:, None],
+                         preferred_element_type=jnp.float32)   # [k_loc, 1]
+    sel_vs = jax.lax.dot(onehot, vs_ref[0][:, None],
+                         preferred_element_type=jnp.float32)
+    sel_valid = jax.lax.dot(
+        onehot, (validb[0][:, None]).astype(jnp.float32),
+        preferred_element_type=jnp.float32)                    # [k_loc, 1]
+
+    # -- current-domain mode: exact online-softmax attention over winners --
+    k_rows = ksel[...].astype(jnp.float32) * sel_ks            # [k_loc, d]
+    v_rows = vsel[...].astype(jnp.float32) * sel_vs            # [k_loc, dv]
+    qf = q_ref[0].astype(jnp.float32)                          # [G, d]
+    logits = jax.lax.dot_general(
+        qf, k_rows, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale            # [G, k_loc]
+    logits = jnp.where(sel_valid[:, 0][None, :] > 0.5, logits, NEG_INF)
+    m_prev = m_sc[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new) * (logits > NEG_INF / 2)
+    l_sc[...] = l_sc[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    o_sc[...] = o_sc[...] * corr + jax.lax.dot(
+        p, v_rows, preferred_element_type=jnp.float32)
+    m_sc[...] = m_new
+
+    # -- charge-domain mode: per-slot approx probabilities for the
+    #    accumulated-score table, once all blocks are scored --
+    @pl.when(j == nb - 1)
+    def _flush():
+        out_ref[0] = o_sc[...] / jnp.maximum(l_sc[...], 1e-30)
+        buf = score_buf[...]                                   # [G, S]
+        lg = buf * scale
+        mg = jnp.max(lg, axis=-1, keepdims=True)
+        e = jnp.exp(lg - mg) * (buf > NEG_INF / 2)
+        z = jnp.sum(e, axis=-1, keepdims=True)
+        probs_ref[0] = jnp.sum(e / jnp.maximum(z, 1e-30), axis=0)
+
+
+def _block_pad(x: jax.Array, nb: int, bs0: int, bs: int) -> jax.Array:
+    """Pad each of the nb slot blocks from bs0 to bs rows IN PLACE.
+
+    Interleaved (per-block) padding keeps the selection partition identical
+    to the unpadded layout — block j still covers original slots
+    [j·bs0, (j+1)·bs0) — unlike trailing padding, which would shift block
+    boundaries and change which slots race each other."""
+    bh = x.shape[0]
+    tail = x.shape[2:]
+    xb = x.reshape((bh, nb, bs0) + tail)
+    widths = [(0, 0), (0, 0), (0, bs - bs0)] + [(0, 0)] * len(tail)
+    return jnp.pad(xb, widths).reshape((bh, nb * bs) + tail)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("select_k", "num_blocks", "interpret",
+                                    "block_align"))
+def fused_decode(q: jax.Array, qq: jax.Array, qscale: jax.Array,
+                 mirror: jax.Array, mscale: jax.Array, kscale: jax.Array,
+                 vscale: jax.Array, valid: jax.Array, prot: jax.Array,
+                 k: jax.Array, v: jax.Array, *, select_k: int,
+                 num_blocks: int = 1, interpret: bool = False,
+                 block_align: int = 0):
+    """Single-pass pruned decode. Returns (out [BH,G,dv], probs [BH,S]).
+
+    S must divide into num_blocks equal selection blocks (callers pad a
+    ragged tail — see ops.fused_decode). block_align=0 picks the backend
+    default: no alignment in interpret mode, 128-lane alignment on TPU
+    (applied per block, preserving the selection partition)."""
+    bh, g, d = q.shape
+    _, s, _ = mirror.shape
+    dv = v.shape[-1]
+    nb = num_blocks
+    assert s % nb == 0, (s, nb)
+    assert select_k % nb == 0, (select_k, nb)
+    k_loc = select_k // nb
+    bs0 = s // nb
+    assert k_loc <= bs0, (k_loc, bs0)
+    align = block_align or (1 if interpret else 128)
+    bs = -(-bs0 // align) * align
+    s_pad = bs * nb
+    if bs != bs0:
+        mirror, k, v = (_block_pad(x, nb, bs0, bs) for x in (mirror, k, v))
+        mscale, kscale, vscale, valid, prot = (
+            _block_pad(x, nb, bs0, bs)
+            for x in (mscale, kscale, vscale, valid, prot))
+    kernel = functools.partial(_fused_decode_kernel, nb=nb, bs=bs,
+                               k_loc=k_loc, scale=1.0 / (d ** 0.5))
+    out, probs = pl.pallas_call(
+        kernel,
+        grid=(bh, nb),
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda i, j: (i, 0, 0)),     # q
+            pl.BlockSpec((1, g, d), lambda i, j: (i, 0, 0)),     # qq
+            pl.BlockSpec((1, g), lambda i, j: (i, 0)),           # qscale
+            pl.BlockSpec((1, bs, d), lambda i, j: (i, j, 0)),    # mirror
+            pl.BlockSpec((1, bs), lambda i, j: (i, j)),          # mscale
+            pl.BlockSpec((1, bs), lambda i, j: (i, j)),          # kscale
+            pl.BlockSpec((1, bs), lambda i, j: (i, j)),          # vscale
+            pl.BlockSpec((1, bs), lambda i, j: (i, j)),          # valid
+            pl.BlockSpec((1, bs), lambda i, j: (i, j)),          # prot
+            pl.BlockSpec(memory_space=pltpu.ANY),                # k (HBM)
+            pl.BlockSpec(memory_space=pltpu.ANY),                # v (HBM)
+        ],
+        out_specs=[
+            pl.BlockSpec((1, g, dv), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, s_pad), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, g, dv), jnp.float32),
+            jax.ShapeDtypeStruct((bh, s_pad), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, s_pad), jnp.float32),     # score buffer
+            pltpu.VMEM((g, 1), jnp.float32),         # running max
+            pltpu.VMEM((g, 1), jnp.float32),         # running denom
+            pltpu.VMEM((g, dv), jnp.float32),        # running output
+            pltpu.VMEM((k_loc, d), k.dtype),         # gathered K winners
+            pltpu.VMEM((k_loc, dv), v.dtype),        # gathered V winners
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+    )(q, qq, qscale.astype(jnp.float32), mirror,
+      mscale.astype(jnp.float32), kscale.astype(jnp.float32),
+      vscale.astype(jnp.float32), valid.astype(jnp.int8),
+      prot.astype(jnp.int8), k, v)
+    if bs != bs0:   # drop the per-block alignment padding
+        probs = probs.reshape(bh, nb, bs)[:, :, :bs0].reshape(bh, s)
+    return out, probs

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.approx_score import approx_score as _approx_pallas
 from repro.kernels.flash_prefill import flash_prefill as _flash_pallas
+from repro.kernels.fused_decode import fused_decode as _fused_pallas
 from repro.kernels.gather_attention import gather_attention as _gather_pallas
 
 
@@ -55,6 +56,37 @@ def gather_attention(q, k, v, valid, block_k: int = 512,
     va_p, _ = _pad_slots(valid.astype(jnp.int8), block_k, 1)
     return _gather_pallas(q, k_p, v_p, va_p, block_k=block_k,
                           interpret=not _on_tpu())
+
+
+def fused_decode(q, qq, qscale, mirror, mscale, kscale, vscale, valid,
+                 prot, k, v, select_k: int, num_blocks: int = 1,
+                 backend: str = "auto"):
+    """Fused single-pass pruned decode (score → select → gather → attend).
+
+    Shapes as in kernels/fused_decode.py. The XLA fallback is one fused
+    region whose gather touches only the selected rows; the Pallas kernel
+    additionally keeps scores/indices out of HBM and DMAs winners row by
+    row. Returns (out [BH, G, dv], probs [BH, S]).
+    """
+    s = mirror.shape[1]
+    if s % num_blocks:
+        # ragged tail: pad to equal selection blocks (both backends see the
+        # same partition; pad slots are invalid so they never win the race)
+        mirror, k, v = (_pad_slots(x, num_blocks, 1)[0]
+                        for x in (mirror, k, v))
+        mscale, kscale, vscale, valid, prot = (
+            _pad_slots(x, num_blocks, 1)[0]
+            for x in (mscale, kscale, vscale, valid, prot))
+    if backend == "xla" or (backend == "auto" and not _on_tpu()):
+        out, probs = ref.fused_decode_ref(
+            q, qq, qscale, mirror, mscale, kscale, vscale, valid, prot,
+            k, v, select_k=select_k, num_blocks=num_blocks)
+    else:
+        out, probs = _fused_pallas(
+            q, qq, qscale, mirror, mscale, kscale, vscale, valid, prot,
+            k, v, select_k=select_k, num_blocks=num_blocks,
+            interpret=not _on_tpu())
+    return out, probs[:, :s]
 
 
 def flash_prefill(q, k, v, group: int = 1, block_q: int = 256,

@@ -45,3 +45,55 @@ def approx_score_packed_ref(qq, qscale, kq_packed, kscale, valid):
     from repro.core.quant import unpack_int4
     return approx_score_ref(qq, qscale, unpack_int4(kq_packed), kscale,
                             valid)
+
+
+def fused_decode_ref(q, qq, qscale, mirror, mscale, kscale, vscale, valid,
+                     prot, k, v, *, select_k, num_blocks=1):
+    """Oracle for the fused single-pass pruned-decode kernel.
+
+    Shapes as in kernels/fused_decode.py. One fused XLA region: score the
+    int8 mirror, block-local top-k, gather ONLY the winners (XLA gather
+    reads k rows, not S), exact softmax attention, and the per-slot
+    approximate probabilities. Returns (out [BH,G,dv], probs [BH,S]).
+    """
+    bh, g, d = q.shape
+    s = mirror.shape[1]
+    nb = num_blocks
+    assert s % nb == 0 and select_k % nb == 0, (s, select_k, nb)
+    k_loc = select_k // nb
+    scale = 1.0 / jnp.sqrt(float(d))
+
+    raw = jnp.einsum("bgd,bsd->bgs", qq.astype(jnp.float32),
+                     mirror.astype(jnp.float32))
+    raw = raw * qscale.astype(jnp.float32)[..., None] \
+              * mscale.astype(jnp.float32)[:, None, :]
+    raw = jnp.where(valid[:, None, :] != 0, raw, NEG_INF)     # [BH,G,S]
+
+    ssel = jnp.sum(raw, axis=1)                               # [BH,S]
+    ssel = jnp.where(prot != 0, 1e30, ssel)
+    _, idx = jax.lax.top_k(ssel.reshape(bh, nb, s // nb), k_loc)
+    gidx = (idx + (jnp.arange(nb) * (s // nb))[None, :, None]
+            ).reshape(bh, nb * k_loc)                         # [BH,K]
+
+    k_sel = jnp.take_along_axis(k, gidx[..., None], axis=1).astype(
+        jnp.float32) * jnp.take_along_axis(
+            kscale.astype(jnp.float32), gidx, axis=1)[..., None]
+    v_sel = jnp.take_along_axis(v, gidx[..., None], axis=1).astype(
+        jnp.float32) * jnp.take_along_axis(
+            vscale.astype(jnp.float32), gidx, axis=1)[..., None]
+    valid_sel = jnp.take_along_axis(valid, gidx, axis=1)      # [BH,K]
+
+    logits = jnp.einsum("bgd,bkd->bgk", q.astype(jnp.float32),
+                        k_sel) * scale
+    logits = jnp.where(valid_sel[:, None, :] != 0, logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m) * (logits > NEG_INF / 2)
+    z = jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bgk,bkd->bgd", e / z, v_sel)
+
+    lg = raw * scale
+    eg = jnp.exp(lg - jnp.max(lg, axis=-1, keepdims=True))
+    eg = eg * (raw > NEG_INF / 2)
+    zg = jnp.maximum(jnp.sum(eg, axis=-1, keepdims=True), 1e-30)
+    probs = jnp.sum(eg / zg, axis=1)                          # [BH,S]
+    return out, probs

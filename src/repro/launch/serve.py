@@ -2,14 +2,18 @@
 
 Implements a slot-based continuous-batching loop: a fixed number of decode
 lanes; finished sequences free their lane for the next queued request. The
-per-step work is one jitted `decode_step` over the whole lane batch — the
-paper's target regime (memory-bound autoregressive decoding).
+per-step work is a single jitted multi-step `lax.scan` over the whole lane
+batch — one dispatch per block of tokens instead of one per token — with
+the decode state (KV cache buffers) donated so XLA updates them in place.
+This is the paper's target regime (memory-bound autoregressive decoding),
+where per-token Python dispatch otherwise dominates the step time.
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import time
-from typing import List, Optional
+from typing import List
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +26,11 @@ from repro.models.transformer import Model
 
 def greedy_generate(model: Model, params, batch, steps: int,
                     temperature: float = 0.0, key=None):
-    """Prefill + `steps` decode steps. Returns [B, steps] generated ids."""
+    """Prefill + `steps` decode steps. Returns [B, steps] generated ids.
+
+    One Python dispatch per token — the reference loop (and the only one
+    that supports sampling); production serving uses the scanned paths.
+    """
     logits, state = jax.jit(model.prefill)(params, batch)
     decode = jax.jit(model.decode_step)
     toks = []
@@ -38,33 +46,65 @@ def greedy_generate(model: Model, params, batch, steps: int,
     return jnp.stack(toks, axis=1), state
 
 
-def generate_scan(model: Model, params, batch, steps: int):
-    """lax.scan'd decode loop (single dispatch; production serving path)."""
-    logits, state = model.prefill(params, batch)
-    tok0 = jnp.argmax(logits, -1)
+def decode_block(model: Model, params, state, tok, steps: int):
+    """`steps` greedy decode steps as one lax.scan (pure, traceable).
 
+    tok: [B] current token → (state, next_tok [B], toks [steps, B]) where
+    toks[0] == tok (the scan emits, then advances — same order as the
+    per-token loop).
+    """
     def body(carry, _):
         state, tok = carry
         logits, state = model.decode_step(params, state, tok)
         nxt = jnp.argmax(logits, -1)
         return (state, nxt), tok
 
-    (state, _), toks = jax.lax.scan(body, (state, tok0), None, length=steps)
+    (state, tok), toks = jax.lax.scan(body, (state, tok), None, length=steps)
+    return state, tok, toks
+
+
+def _donate_argnums():
+    # buffer donation is a no-op (and warns) on CPU; donate the decode
+    # state + token carry everywhere it is actually honoured
+    return () if jax.default_backend() == "cpu" else (1, 2)
+
+
+@functools.lru_cache(maxsize=64)
+def _jit_decode_block(model: Model, steps: int):
+    return jax.jit(functools.partial(decode_block, model, steps=steps),
+                   donate_argnums=_donate_argnums())
+
+
+def generate_scan(model: Model, params, batch, steps: int):
+    """lax.scan'd decode loop (single dispatch; production serving path).
+
+    The decode block is jitted with the (state, token) carry donated; under
+    an outer jit the inner jit inlines and the whole call stays traceable.
+    """
+    logits, state = jax.jit(model.prefill)(params, batch)
+    tok0 = jnp.argmax(logits, -1)
+    state, _, toks = _jit_decode_block(model, steps)(params, state, tok0)
     return toks.swapaxes(0, 1), state
 
 
 class ServeLoop:
-    """Minimal continuous batching: fixed decode lanes + request queue."""
+    """Minimal continuous batching: fixed decode lanes + request queue.
+
+    `block` sets how many tokens each dispatch decodes: the scanned block
+    amortizes launch overhead across `block` tokens, at the cost of up to
+    `block - 1` speculative steps after a lane hits EOS/budget (their
+    outputs are dropped by the host-side bookkeeping below).
+    """
 
     def __init__(self, model: Model, params, lanes: int, prompt_len: int,
-                 max_new: int = 64, eos: int = -1):
+                 max_new: int = 64, eos: int = -1, block: int = 1):
         self.model = model
         self.params = params
         self.lanes = lanes
         self.max_new = max_new
         self.eos = eos
         self.prompt_len = prompt_len
-        self._decode = jax.jit(model.decode_step)
+        self.block = max(1, block)
         self._prefill = jax.jit(model.prefill)
         self.state = None
         self.remaining = np.zeros(lanes, np.int64)
@@ -82,18 +122,23 @@ class ServeLoop:
 
     def step(self) -> bool:
         """One decode step over all lanes; returns True while any lane live."""
+        return self.step_block(1)
+
+    def step_block(self, steps: int = 0) -> bool:
+        """Decode `steps` (default: self.block) tokens in one dispatch."""
+        steps = steps or self.block
         if self.state is None or not (self.remaining > 0).any():
             return False
-        logits, self.state = self._decode(self.params, self.state, self.tok)
-        nxt = jnp.argmax(logits, -1)
-        host = np.asarray(self.tok)
-        for i in range(self.lanes):
-            if self.remaining[i] > 0:
-                self.outputs[i].append(int(host[i]))
-                self.remaining[i] -= 1
-                if host[i] == self.eos:
-                    self.remaining[i] = 0
-        self.tok = nxt
+        fn = _jit_decode_block(self.model, steps)
+        self.state, self.tok, toks = fn(self.params, self.state, self.tok)
+        host = np.asarray(toks)                             # [steps, lanes]
+        for t in range(host.shape[0]):
+            for i in range(self.lanes):
+                if self.remaining[i] > 0:
+                    self.outputs[i].append(int(host[t, i]))
+                    self.remaining[i] -= 1
+                    if host[t, i] == self.eos:
+                        self.remaining[i] = 0
         return bool((self.remaining > 0).any())
 
 
@@ -106,6 +151,10 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--policy", default="unicaim",
                     choices=["unicaim", "h2o", "streaming", "dense"])
+    ap.add_argument("--fused", action="store_true",
+                    help="single-pass fused decode engine (unicaim only)")
+    ap.add_argument("--no-scan", action="store_true",
+                    help="per-token Python loop instead of lax.scan")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -114,7 +163,8 @@ def main(argv=None):
     budget = max(64, args.prompt_len // 2)
     if args.policy == "unicaim":
         prune = baselines.unicaim(heavy=budget, reserve=64,
-                                  select_k=max(16, budget // 8))
+                                  select_k=max(16, budget // 8),
+                                  fused=args.fused)
     elif args.policy == "h2o":
         prune = baselines.h2o(heavy=budget, reserve=64)
     elif args.policy == "streaming":
@@ -127,9 +177,15 @@ def main(argv=None):
         0, cfg.vocab_size, (args.batch, args.prompt_len))
     batch = {"tokens": jnp.asarray(prompts)}
     t0 = time.time()
-    toks, _ = greedy_generate(model, params, batch, args.new_tokens)
+    if args.no_scan:
+        toks, _ = greedy_generate(model, params, batch, args.new_tokens)
+    else:
+        toks, _ = generate_scan(model, params, batch, args.new_tokens)
+    toks = jax.block_until_ready(toks)
     dt = time.time() - t0
-    print(f"arch={cfg.name} policy={args.policy} cache_slots={prune.slots} "
+    mode = "loop" if args.no_scan else "scan"
+    print(f"arch={cfg.name} policy={args.policy} mode={mode} "
+          f"fused={args.fused} cache_slots={prune.slots} "
           f"generated {toks.shape} in {dt:.2f}s "
           f"({args.batch * args.new_tokens / dt:.1f} tok/s)")
 

@@ -7,20 +7,18 @@ Usage (end-to-end example):
 from __future__ import annotations
 
 import argparse
-import functools
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, PruneConfig, get_config, reduced
+from repro.configs.base import get_config, reduced
 from repro.core import baselines
-from repro.data.pipeline import DataPipeline, SyntheticSource
+from repro.data.pipeline import SyntheticSource
 from repro.checkpoint.manager import CheckpointManager
 from repro.models.transformer import Model
 from repro.optim import adamw, schedule
-from repro.runtime import fault, params_shardings, use_mesh
-from repro.runtime.sharding import named_sharding
+from repro.runtime import fault
 
 
 class TrainState(NamedTuple):

@@ -1,7 +1,7 @@
 """GQA attention block wired to the UniCAIM cache (train/prefill/decode)."""
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

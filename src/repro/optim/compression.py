@@ -14,12 +14,11 @@ quantized shards).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.runtime.compat import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 
@@ -79,5 +78,5 @@ def compressed_psum(x: jax.Array, mesh: Mesh, axis: str = "data"
 
     spec = P()  # replicated in/out
     fn = shard_map(gather_body, mesh=mesh, in_specs=(spec,), out_specs=spec,
-                   check_rep=False)
+                   check_vma=False)
     return fn(x)

@@ -1,0 +1,25 @@
+"""Version compatibility shims for the jax API surface we depend on.
+
+`shard_map` moved from `jax.experimental.shard_map` to the `jax` top level,
+and its replication-check kwarg was renamed `check_rep` → `check_vma` along
+the way. Every call site in this repo imports the wrapper below, which
+accepts `check_vma` and translates to whatever the installed jax expects.
+"""
+from __future__ import annotations
+
+import functools
+
+try:  # jax >= 0.6: top-level export, `check_vma` kwarg
+    from jax import shard_map as _shard_map
+    _CHECK_KWARG = "check_vma"
+except ImportError:  # older jax: experimental module, `check_rep` kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KWARG = "check_rep"
+
+
+@functools.wraps(_shard_map)
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):
+    if check_vma is not None:
+        kwargs[_CHECK_KWARG] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)

@@ -1,0 +1,190 @@
+"""Fused single-pass pruned-decode engine: parity against the composed
+three-pass oracle (approx_score → top-k → gather) and against dense
+attention, across bf16 and int8 cache modes, at three levels:
+
+  kernel  — Pallas (interpret) vs the pure-jnp oracle in kernels/ref.py
+  engine  — decode_attention(fused=True) vs the composed path, including
+            the charge-domain accumulated-score table across evictions
+  model   — scanned generation through a full transformer
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import PruneConfig
+from repro.core.attention import decode_attention
+from repro.core.cache import init_cache
+from repro.kernels import ref
+from repro.kernels.fused_decode import fused_decode
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _kernel_args(bh, g, d, dv, s, key=0, quantized=False, valid_frac=0.8,
+                 prot_frac=0.1):
+    ks = jax.random.split(jax.random.PRNGKey(key), 10)
+    q = jax.random.normal(ks[0], (bh, g, d))
+    qq = jax.random.randint(ks[1], (bh, g, d), -7, 8, jnp.int8)
+    qs = jax.random.uniform(ks[2], (bh, g)) + 0.05
+    mirror = jax.random.randint(ks[3], (bh, s, d), -7, 8, jnp.int8)
+    ms = jax.random.uniform(ks[4], (bh, s)) + 0.05
+    if quantized:
+        k = jax.random.randint(ks[5], (bh, s, d), -127, 128, jnp.int8)
+        v = jax.random.randint(ks[6], (bh, s, dv), -127, 128, jnp.int8)
+        kscale = jax.random.uniform(ks[7], (bh, s)) * 0.02 + 0.001
+        vscale = jax.random.uniform(ks[8], (bh, s)) * 0.02 + 0.001
+    else:
+        k = jax.random.normal(ks[5], (bh, s, d))
+        v = jax.random.normal(ks[6], (bh, s, dv))
+        kscale = jnp.ones((bh, s))
+        vscale = jnp.ones((bh, s))
+    valid = jax.random.bernoulli(ks[9], valid_frac, (bh, s)).astype(jnp.int8)
+    prot = (jax.random.bernoulli(jax.random.PRNGKey(key + 77), prot_frac,
+                                 (bh, s)).astype(jnp.int8)) * valid
+    return q, qq, qs, mirror, ms, kscale, vscale, valid, prot, k, v
+
+
+@pytest.mark.parametrize("bh,g,d,dv,s,nb,sk,quantized", [
+    (2, 4, 32, 32, 64, 1, 16, False),
+    (2, 4, 32, 32, 64, 2, 16, False),     # block-local race
+    (3, 2, 16, 24, 48, 4, 8, True),       # int8 K/V, dv != d
+    (1, 1, 16, 16, 40, 1, 8, False),      # single head, ragged S
+    (2, 8, 32, 32, 96, 3, 12, True),
+])
+def test_fused_kernel_matches_ref(bh, g, d, dv, s, nb, sk, quantized):
+    args = _kernel_args(bh, g, d, dv, s, key=s + nb, quantized=quantized)
+    out_k, probs_k = fused_decode(*args, select_k=sk, num_blocks=nb,
+                                  interpret=True)
+    out_r, probs_r = ref.fused_decode_ref(*args, select_k=sk, num_blocks=nb)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(probs_k), np.asarray(probs_r),
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("nb,align", [(1, 128), (2, 16), (4, 128)])
+def test_fused_kernel_block_alignment_preserves_partition(nb, align):
+    """TPU lane alignment pads each selection block IN PLACE (bs0 → bs),
+    so block boundaries — and therefore the block-local race and its
+    winners — must be identical to the unaligned oracle partition."""
+    bh, g, d, dv, s, sk = 2, 2, 16, 16, 64, 8
+    args = _kernel_args(bh, g, d, dv, s, key=5)
+    out_a, probs_a = fused_decode(*args, select_k=sk, num_blocks=nb,
+                                  interpret=True, block_align=align)
+    out_r, probs_r = ref.fused_decode_ref(*args, select_k=sk, num_blocks=nb)
+    np.testing.assert_allclose(np.asarray(out_a), np.asarray(out_r),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(probs_a), np.asarray(probs_r),
+                               atol=1e-6)
+
+
+def test_fused_kernel_protected_always_selected():
+    """Slots flagged protected must win the race even with the worst
+    scores: give one protected slot a huge NEGATIVE mirror score and check
+    it still contributes to the output (its V row is gathered)."""
+    bh, g, d, dv, s, sk = 1, 2, 16, 16, 32, 4
+    args = list(_kernel_args(bh, g, d, dv, s, key=3, valid_frac=1.0,
+                             prot_frac=0.0))
+    q, qq, qs, mirror, ms, kscale, vscale, valid, prot, k, v = args
+    prot = prot.at[0, 7].set(1)
+    ms = ms.at[0, 7].set(1e4)              # terrible (dominant) raw score…
+    mirror = mirror.at[0, 7].set(-7)       # …uniformly negative
+    v = v.at[0, 7].set(100.0)              # detectable payload
+    out, _ = fused_decode(q, qq, qs, mirror, ms, kscale, vscale, valid,
+                          prot, k, v, select_k=sk, num_blocks=1,
+                          interpret=True)
+    out_ref, _ = ref.fused_decode_ref(q, qq, qs, mirror, ms, kscale,
+                                      vscale, valid, prot, k, v,
+                                      select_k=sk, num_blocks=1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref),
+                               atol=1e-4)
+    # the protected slot's exact logit is fine (real K), so its 100-valued
+    # V row must show up in the attention mix
+    assert np.asarray(out).max() > 1.0
+
+
+def _run_steps(prune, steps=40, B=2, HK=2, HQ=4, D=16, seed=0):
+    cache = init_cache(B, HK, D, prune.slots, prune, jnp.float32)
+    fn = jax.jit(lambda c, q, k, v: decode_attention(c, q, k, v, prune))
+    outs = []
+    for i in range(steps):
+        ks = jax.random.split(jax.random.PRNGKey(seed * 1000 + i), 3)
+        q = jax.random.normal(ks[0], (B, HQ, D))
+        kn = jax.random.normal(ks[1], (B, HK, D))
+        vn = jax.random.normal(ks[2], (B, HK, D))
+        cache, o = fn(cache, q, kn, vn)
+        outs.append(np.asarray(o))
+    return np.stack(outs), cache
+
+
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8"])
+@pytest.mark.parametrize("nb", [1, 2])
+def test_fused_engine_matches_composed(kv_dtype, nb):
+    """40 decode steps (spanning evictions): fused out + accumulated-score
+    table must track the composed three-pass path."""
+    base = PruneConfig(policy="unicaim", heavy_budget=24, reserve=8,
+                       sink_tokens=2, recent_window=4, select_k=8,
+                       select_blocks=nb, score_bits=3, query_bits=4,
+                       kv_dtype=kv_dtype)
+    o_comp, c_comp = _run_steps(base)
+    o_fused, c_fused = _run_steps(
+        dataclasses.replace(base, fused=True, fused_backend="xla"))
+    np.testing.assert_allclose(o_fused, o_comp, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c_fused.acc),
+                               np.asarray(c_comp.acc), atol=1e-5)
+
+
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8"])
+def test_fused_pallas_engine_matches_composed(kv_dtype):
+    """Same parity through the Pallas kernel (interpret mode on CPU)."""
+    base = PruneConfig(policy="unicaim", heavy_budget=24, reserve=8,
+                       sink_tokens=2, recent_window=4, select_k=8,
+                       score_bits=3, query_bits=4, kv_dtype=kv_dtype)
+    o_comp, c_comp = _run_steps(base, steps=20)
+    o_pall, c_pall = _run_steps(
+        dataclasses.replace(base, fused=True, fused_backend="pallas"),
+        steps=20)
+    np.testing.assert_allclose(o_pall, o_comp, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c_pall.acc),
+                               np.asarray(c_comp.acc), atol=1e-5)
+
+
+def test_fused_matches_dense_when_selection_covers_cache():
+    """With select_k == slots every (valid) token is a winner, so the fused
+    engine must reproduce dense attention on the same cache contents —
+    the 'protected tokens see exact attention' guarantee end to end."""
+    slots = 32
+    dense = PruneConfig(policy="dense", heavy_budget=slots, reserve=0,
+                        sink_tokens=0, recent_window=1, select_k=1)
+    fused = PruneConfig(policy="unicaim", heavy_budget=slots - 8, reserve=8,
+                        sink_tokens=2, recent_window=4, select_k=slots,
+                        score_bits=8, query_bits=8, fused=True,
+                        fused_backend="xla")
+    # stay below `slots` steps: both policies append-only → same contents
+    o_dense, _ = _run_steps(dense, steps=slots - 4)
+    o_fused, _ = _run_steps(fused, steps=slots - 4)
+    np.testing.assert_allclose(o_fused, o_dense, atol=1e-4)
+
+
+def test_fused_model_scan_generation_matches_loop():
+    """Full transformer with the fused engine: the scanned serving decode
+    must emit exactly the per-token Python loop's tokens."""
+    from repro.configs.base import get_config, reduced
+    from repro.core import baselines
+    from repro.launch.serve import generate_scan, greedy_generate
+    from repro.models.transformer import Model
+
+    cfg = reduced(get_config("longchat-7b"))
+    prune = baselines.unicaim(heavy=48, reserve=16, select_k=16,
+                              sink_tokens=2, recent_window=8, fused=True)
+    model = Model(cfg, prune)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 64),
+                                          0, cfg.vocab_size)}
+    t1, _ = greedy_generate(model, params, batch, steps=8)
+    t2, _ = jax.jit(lambda p, b: generate_scan(model, p, b, 8))(params,
+                                                                batch)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))

@@ -7,7 +7,7 @@ import pytest
 
 from repro.configs.base import get_config, list_archs, reduced
 from repro.core import baselines
-from repro.launch.train import (TrainState, init_train_state, make_train_step)
+from repro.launch.train import init_train_state, make_train_step
 from repro.models.transformer import Model
 from repro.optim import adamw
 

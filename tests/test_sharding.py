@@ -1,9 +1,7 @@
 """Sharding rules: divisibility fallbacks, combined axes, cache specs, and
 a tiny-mesh pjit end-to-end check (runs on however many host devices exist)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import PruneConfig, get_config, reduced
@@ -17,7 +15,10 @@ jax.config.update("jax_platform_name", "cpu")
 
 def _fake_mesh(shape, axes):
     """Abstract mesh over fake devices for spec computation only."""
-    return jax.sharding.AbstractMesh(shape, axes)
+    try:
+        return jax.sharding.AbstractMesh(shape, axes)
+    except TypeError:  # older jax: single tuple of (name, size) pairs
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
 
 
 MESH = _fake_mesh((16, 16), ("data", "model"))

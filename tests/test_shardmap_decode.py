@@ -62,46 +62,50 @@ def test_shardmap_decode_matches_reference():
 MLA_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    import jax, jax.numpy as jnp, numpy as np, dataclasses
-    from repro.configs.base import get_config, reduced, PruneConfig
-    from repro.models.transformer import Model
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs.base import PruneConfig
+    from repro.core import quant, scoring, topk
+    from repro.core.cache import init_cache, protected_mask, write_token
+    from repro.core.topk import NEG_INF
+    from repro.models.mla import _mla_blocked_shardmap
     from repro.runtime.sharding import use_mesh
 
-    cfg = reduced(get_config("deepseek-v3-671b"))
     # FULL budget (select_k == slots): every block keeps everything, so the
-    # shard-local MLA race must equal dense latent attention exactly.
-    slots = 64
-    pr_blk = PruneConfig(policy="unicaim", heavy_budget=slots - 8,
-                         reserve=8, sink_tokens=2, recent_window=4,
-                         select_k=slots, select_blocks=4, score_bits=8,
-                         query_bits=8)
-    from repro.core import baselines
-    pr_dense = baselines.dense(slots)
-    m_d = Model(cfg, pr_dense)
-    params = m_d.init(jax.random.PRNGKey(0))
-    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 48),
-                                          0, cfg.vocab_size)}
-    lg, st = jax.jit(m_d.prefill)(params, batch)
-    outs_ref = []
-    tok0 = jnp.argmax(lg, -1)
-    tok = tok0
-    dec = jax.jit(m_d.decode_step)
-    for i in range(6):
-        lg, st = dec(params, st, tok)
-        outs_ref.append(np.asarray(lg))
-        tok = jnp.argmax(lg, -1)
+    # shard-local MLA race must equal dense latent attention exactly. The
+    # comparison is at the latent-attention component level — full-model
+    # logits go through MoE top-k routing, whose near-tie flips between two
+    # differently-compiled (mesh vs no-mesh) programs are O(1) fp noise and
+    # would mask a real shardmap bug.
+    B, H, S, LAT, KVR = 4, 8, 64, 40, 32
+    prune = PruneConfig(policy="unicaim", heavy_budget=S - 8, reserve=8,
+                        sink_tokens=2, recent_window=4, select_k=S,
+                        select_blocks=4, score_bits=8, query_bits=8)
+    cache = init_cache(B, 1, LAT, S, prune, jnp.float32, latent=True)
+    for i in range(50):
+        u = jax.random.normal(jax.random.PRNGKey(i), (B, 1, LAT))
+        cache = write_token(cache, u, None, prune)
+
+    q_full = jax.random.normal(jax.random.PRNGKey(99), (B, H, LAT))
+    qq, qs = quant.quantize_query(q_full, prune.query_bits)
+    s_apx = scoring.approx_scores(qq, qs, cache.kq, cache.kscale,
+                                  cache.valid)
+    grouped = topk.gqa_group_scores(s_apx, 1)
+    biased = topk.apply_selection_bias(
+        grouped, protected_mask(cache, prune), ~cache.valid)
+    scale_dim = 48
+
+    u_all = cache.k[:, 0].astype(jnp.float32)
+    logits = jnp.einsum("bhk,bsk->bhs", q_full, u_all) \\
+        / jnp.sqrt(float(scale_dim))
+    logits = jnp.where(cache.valid[:, 0][:, None, :], logits, NEG_INF)
+    pr = jax.nn.softmax(logits, axis=-1)
+    ref = jnp.einsum("bhs,bsk->bhk", pr, u_all[:, :, :KVR])
 
     mesh = jax.make_mesh((2, 4), ("data", "model"))
     with use_mesh(mesh):
-        m = Model(cfg, pr_blk)     # shard_map path (blocks == model axis)
-        lg, st = jax.jit(m.prefill)(params, batch)
-        tok = tok0
-        dec = jax.jit(m.decode_step)
-        for i in range(6):
-            lg, st = dec(params, st, tok)
-            np.testing.assert_allclose(np.asarray(lg), outs_ref[i],
-                                       atol=5e-3)
-            tok = jnp.argmax(outs_ref[i], -1)
+        got = _mla_blocked_shardmap(cache, q_full, biased, prune, mesh,
+                                    KVR, scale_dim)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-4)
     print("MLA_SHARDMAP_OK")
 """)
 

@@ -9,11 +9,10 @@ The paper's headline application claims, miniaturised to CPU scale:
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import get_config, reduced
 from repro.core import baselines
-from repro.launch.serve import ServeLoop, greedy_generate
+from repro.launch.serve import ServeLoop
 from repro.models.transformer import Model
 
 jax.config.update("jax_platform_name", "cpu")
@@ -103,6 +102,36 @@ def test_serve_loop_continuous_batching():
         steps += 1
         assert steps < 50
     assert all(len(o) == 6 for o in loop.outputs)
+
+
+def test_serve_loop_block_decode_matches_single_step():
+    """block>1 dispatch: the host-side bookkeeping must emit exactly the
+    per-step loop's tokens, truncated at an EOS that lands MID-block (the
+    speculative steps after it are computed but dropped)."""
+    cfg, model, params = _model()
+    prompts = np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 64))
+    ref = ServeLoop(model, params, lanes=2, prompt_len=64, max_new=6)
+    ref.admit(prompts)
+    while ref.step():
+        pass
+    eos = ref.outputs[0][2]          # lane 0 hits EOS at step 2 of block 3
+
+    def trunc(seq):
+        out = []
+        for t in seq:
+            out.append(t)
+            if t == eos:
+                break
+        return out
+
+    blk = ServeLoop(model, params, lanes=2, prompt_len=64, max_new=6,
+                    eos=eos, block=3)
+    blk.admit(prompts)
+    steps = 0
+    while blk.step_block():
+        steps += 1
+        assert steps <= 2            # 6 tokens / block of 3
+    assert blk.outputs == [trunc(s) for s in ref.outputs]
 
 
 def test_long_generation_keeps_heavy_history_not_just_window():
