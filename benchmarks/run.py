@@ -12,10 +12,10 @@ import sys
 import time
 
 BENCHES = ("aedp", "footprint", "energy", "latency", "fidelity",
-           "accuracy", "needle")
+           "accuracy", "needle", "serve")
 
 
-SMOKE_BENCHES = ("aedp", "latency")
+SMOKE_BENCHES = ("aedp", "latency", "serve")
 
 
 def main(argv=None) -> None:

@@ -1,13 +1,15 @@
 """Long-context serving with a fixed KV budget — the paper's target workload.
 
-Serves batched requests through the ServeLoop (continuous batching) with
-UniCAIM pruning, decoding far past the cache budget with constant memory,
-and reports tokens/s + cache occupancy. Compares policies side by side.
+Drives the lane-granular continuous-batching ServeLoop with staggered,
+variable-length requests: each request carries its own prompt and budget,
+is prefilled on its own and spliced into a free lane mid-flight, and lanes
+are recycled the moment a request hits its budget — the fixed-slot UniCAIM
+cache stays busy under mixed traffic. Compares policies side by side on
+the same request set and reports per-request latency, tokens/s, and cache
+occupancy.
 
 Run:  PYTHONPATH=src python examples/long_context_serving.py
 """
-import time
-
 import jax
 import numpy as np
 
@@ -16,12 +18,21 @@ from repro.core import baselines
 from repro.launch.serve import ServeLoop
 from repro.models.transformer import Model
 
-PROMPT, NEW, LANES = 192, 64, 4
+LANES = 2
+REQUESTS = [      # (prompt_len, max_new, arrival_s) — staggered, mixed sizes
+    (192, 48, 0.0),
+    (96, 16, 0.0),
+    (160, 64, 0.1),
+    (64, 24, 0.2),
+    (192, 16, 0.4),
+    (128, 32, 0.4),
+]
+
 
 def main():
     cfg = reduced(get_config("longchat-7b"))   # the paper's own eval model
     rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab_size, (LANES, PROMPT))
+    prompts = [rng.integers(0, cfg.vocab_size, t) for t, _, _ in REQUESTS]
     params = None
     for policy, prune in (
         ("unicaim", baselines.unicaim(heavy=56, reserve=16, select_k=24,
@@ -29,24 +40,29 @@ def main():
                                       recent_window=8)),
         ("h2o", baselines.h2o(heavy=56, reserve=16)),
         ("streaming", baselines.streaming(72, sinks=2)),
-        ("dense", baselines.dense(PROMPT + NEW + 8)),
+        ("dense", baselines.dense(max(t + n for t, n, _ in REQUESTS) + 8)),
     ):
         model = Model(cfg, prune)
         if params is None:
             params = model.init(jax.random.PRNGKey(0))
-        loop = ServeLoop(model, params, lanes=LANES, prompt_len=PROMPT,
-                         max_new=NEW)
-        t0 = time.time()
-        loop.admit(prompts)
-        while loop.step():
-            pass
-        dt = time.time() - t0
+        loop = ServeLoop(model, params, lanes=LANES, block=8)
+        for prompt, (_, max_new, arrival) in zip(prompts, REQUESTS):
+            loop.submit(prompt, max_new=max_new, arrival=arrival)
+        stats = loop.run()
+        agg = loop.aggregate()
         kv_bytes = sum(x.nbytes for x in jax.tree.leaves(loop.state.kv)) \
             if loop.state.kv is not None else 0
-        print(f"{policy:10s} cache={prune.slots if policy != 'dense' else PROMPT + NEW + 8:5d} slots "
-              f"kv={kv_bytes/2**20:7.1f}MiB  "
-              f"{LANES * NEW / dt:7.1f} tok/s  "
-              f"({dt:.1f}s for {LANES}x{NEW} tokens)")
+        print(f"{policy:10s} cache={prune.slots:4d} slots "
+              f"kv={kv_bytes / 2**20:6.1f}MiB "
+              f"{agg['tokens_per_s']:7.1f} tok/s  "
+              f"mean_latency={agg['mean_latency_s']:.2f}s "
+              f"occ={agg['mean_occupancy']:.2f}")
+        for s in sorted(stats, key=lambda s: s.rid):
+            print(f"    req {s.rid}: lane={s.lane} prompt={s.prompt_len:4d} "
+                  f"new={len(s.tokens):3d} latency={s.latency:5.2f}s "
+                  f"ttft={s.t_first - s.t_arrival:5.2f}s "
+                  f"occ={s.occupancy:.2f}")
+
 
 if __name__ == "__main__":
     main()

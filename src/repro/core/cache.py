@@ -82,6 +82,56 @@ def init_cache(batch: int, n_kv_heads: int, head_dim: int, slots: int,
     )
 
 
+# ---------------------------------------------------------------------------
+# Per-lane (batch-slot) surgery — continuous-batching support.
+#
+# A serving engine keeps one live batched cache and recycles individual
+# batch lanes as requests finish: slice a lane out, reset it, or splice a
+# freshly prefilled batch-1 cache into it without disturbing the others.
+# `batch_axis=0` operates on a single-layer cache; `batch_axis=1` on the
+# layer-stacked caches models carry in their DecodeState ([L, B, ...]).
+# All fields move together — including the quantized mirrors (kq/kscale/
+# vscale) and the accumulated scores — so eviction state is per-lane exact.
+# ---------------------------------------------------------------------------
+
+
+def lane_slice(cache: KVCache, lane, batch_axis: int = 0) -> KVCache:
+    """Extract one lane as a batch-1 cache (jit-safe; `lane` may be traced)."""
+    def sl(a):
+        if a is None:
+            return None
+        return jax.lax.dynamic_slice_in_dim(a, lane, 1, axis=batch_axis)
+    return KVCache(*(sl(f) for f in cache))
+
+
+def lane_insert(cache: KVCache, lane, fresh: KVCache,
+                batch_axis: int = 0) -> KVCache:
+    """Splice a batch-1 `fresh` cache into lane `lane` of a live cache."""
+    def ins(a, f):
+        if a is None:
+            return None
+        return jax.lax.dynamic_update_slice_in_dim(
+            a, f.astype(a.dtype), lane, axis=batch_axis)
+    return KVCache(*(ins(a, f) for a, f in zip(cache, fresh)))
+
+
+def lane_reset(cache: KVCache, lane, batch_axis: int = 0) -> KVCache:
+    """Return `cache` with one lane emptied (as `init_cache` would make it)."""
+    def blank(a, fill_value=0):
+        if a is None:
+            return None
+        shape = list(a.shape)
+        shape[batch_axis] = 1
+        return jnp.full(shape, fill_value, a.dtype)
+    empty = KVCache(
+        k=blank(cache.k), v=blank(cache.v), kq=blank(cache.kq),
+        kscale=blank(cache.kscale), vscale=blank(cache.vscale),
+        acc=blank(cache.acc), valid=blank(cache.valid),
+        pos=blank(cache.pos, -1), fill=blank(cache.fill),
+        step=blank(cache.step))
+    return lane_insert(cache, lane, empty, batch_axis=batch_axis)
+
+
 def protected_mask(cache: KVCache, prune: PruneConfig) -> jax.Array:
     """[B, Hk, S] — slots that must never be evicted (sinks + recent)."""
     is_sink = (cache.pos >= 0) & (cache.pos < prune.sink_tokens)

@@ -1,19 +1,32 @@
-"""Serving driver: batched prefill + decode with the UniCAIM cache.
+"""Serving driver: lane-granular continuous batching over the UniCAIM cache.
 
-Implements a slot-based continuous-batching loop: a fixed number of decode
-lanes; finished sequences free their lane for the next queued request. The
-per-step work is a single jitted multi-step `lax.scan` over the whole lane
-batch — one dispatch per block of tokens instead of one per token — with
-the decode state (KV cache buffers) donated so XLA updates them in place.
-This is the paper's target regime (memory-bound autoregressive decoding),
-where per-token Python dispatch otherwise dominates the step time.
+The engine keeps a fixed number of decode *lanes* (batch slots) and a
+request queue. Each request carries its own prompt (arbitrary length ≤ max)
+and `max_new` budget; it is prefilled on its own (`Model.prefill_one`) and
+spliced into a free lane of the live batched `DecodeState`
+(`transformer.lane_insert`) without disturbing the other lanes. Decode runs
+as a single jitted multi-step `lax.scan` over the whole lane batch — one
+dispatch per block of tokens — with the state donated so XLA updates it in
+place.
+
+Termination is **in-device**: an `active` lane mask rides through the
+scanned block, finished lanes stop contributing state writes, and the block
+returns per-step (token, emitted) pairs so the host bookkeeping is
+vectorized numpy instead of a per-token/per-lane Python loop. A lane that
+hits EOS or its budget is freed and refilled from the queue mid-flight —
+the fixed-budget cache (the paper's point) stays busy under realistic
+mixed traffic. This is the paper's target regime: memory-bound
+autoregressive decoding where per-token Python dispatch otherwise
+dominates the step time.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import functools
 import time
-from typing import List
+from collections import deque
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +34,7 @@ import numpy as np
 
 from repro.configs.base import get_config, reduced
 from repro.core import baselines
-from repro.models.transformer import Model
+from repro.models.transformer import Model, lane_insert, lane_select
 
 
 def greedy_generate(model: Model, params, batch, steps: int,
@@ -63,16 +76,95 @@ def decode_block(model: Model, params, state, tok, steps: int):
     return state, tok, toks
 
 
-def _donate_argnums():
+def decode_block_masked(model: Model, params, state, tok, active, rem,
+                        steps: int, eos: int):
+    """`steps` greedy decode steps with in-device per-lane termination.
+
+    active: [B] bool lane-live mask; rem: [B] int32 remaining budget.
+    Each step emits the carried token for active lanes, then advances; a
+    lane deactivates after emitting EOS (if eos >= 0) or exhausting its
+    budget, and from then on its state is frozen (lane_select drops its
+    writes) while the other lanes keep decoding. Returns
+    (state, tok, active, rem, toks [steps, B], emitted [steps, B]).
+    """
+    def body(carry, _):
+        state, tok, active, rem = carry
+        logits, new_state = model.decode_step(params, state, tok)
+        state = lane_select(active, new_state, state)
+        emit = active & (rem > 0)      # robust to active lanes w/o budget
+        rem = rem - emit.astype(rem.dtype)
+        active = emit if eos < 0 else emit & (tok != eos)
+        active = active & (rem > 0)
+        nxt = jnp.argmax(logits, -1).astype(tok.dtype)
+        return (state, nxt, active, rem), (tok, emit)
+
+    (state, tok, active, rem), (toks, emitted) = jax.lax.scan(
+        body, (state, tok, active, rem), None, length=steps)
+    return state, tok, active, rem, toks, emitted
+
+
+def _donate_argnums(*argnums):
     # buffer donation is a no-op (and warns) on CPU; donate the decode
-    # state + token carry everywhere it is actually honoured
-    return () if jax.default_backend() == "cpu" else (1, 2)
+    # state + carries everywhere it is actually honoured
+    return () if jax.default_backend() == "cpu" else argnums
 
 
-@functools.lru_cache(maxsize=64)
-def _jit_decode_block(model: Model, steps: int):
+# Jitted entry points are cached on the Model's full constructor identity
+# (config, prune, slots, remat knobs) — all hashable — NOT on Model
+# instances: a Model-keyed cache would pin jit caches (and their
+# params-sized constants) for every short-lived Model/ServeLoop ever
+# created. Functionally identical Models share one compiled program.
+
+
+def _model_key(model: Model):
+    return (model.cfg, model.prune, model.decode_slots, model.remat,
+            model.remat_policy)
+
+
+def _rebuild(cfg, prune, slots, remat, remat_policy) -> Model:
+    return Model(cfg, prune, remat=remat, decode_slots=slots,
+                 remat_policy=remat_policy)
+
+
+@functools.lru_cache(maxsize=32)
+def _block_fn(key, steps: int):
+    model = _rebuild(*key)
     return jax.jit(functools.partial(decode_block, model, steps=steps),
-                   donate_argnums=_donate_argnums())
+                   donate_argnums=_donate_argnums(1, 2))
+
+
+@functools.lru_cache(maxsize=32)
+def _masked_block_fn(key, steps: int, eos: int):
+    model = _rebuild(*key)
+    fn = functools.partial(decode_block_masked, model, steps=steps, eos=eos)
+    return jax.jit(fn, donate_argnums=_donate_argnums(1, 2, 3, 4))
+
+
+@functools.lru_cache(maxsize=32)
+def _prefill_fn(key):
+    return jax.jit(_rebuild(*key).prefill)
+
+
+@functools.lru_cache(maxsize=32)
+def _prefill_one_fn(key):
+    return jax.jit(_rebuild(*key).prefill_one)
+
+
+def _jit_decode_block(model: Model, steps: int):
+    return _block_fn(_model_key(model), steps)
+
+
+def _admit_lane_state(state, tok, lane, fresh, logits):
+    """One-dispatch admission: splice `fresh` into `lane` and seed its
+    first token from the prefill logits (state/tok donated in place)."""
+    state = lane_insert(state, lane, fresh)
+    tok = tok.at[lane].set(jnp.argmax(logits, -1).astype(tok.dtype))
+    return state, tok
+
+
+@functools.lru_cache(maxsize=1)
+def _admit_fn():
+    return jax.jit(_admit_lane_state, donate_argnums=_donate_argnums(0, 1))
 
 
 def generate_scan(model: Model, params, batch, steps: int):
@@ -87,59 +179,274 @@ def generate_scan(model: Model, params, batch, steps: int):
     return toks.swapaxes(0, 1), state
 
 
+# ---------------------------------------------------------------------------
+# Requests + per-request serving metrics
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. `arrival` is seconds from `run()` start
+    (0 = already waiting); `submit()` keeps the queue arrival-ordered."""
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    arrival: float = 0.0
+
+
+@dataclasses.dataclass
+class RequestStats:
+    rid: int
+    prompt_len: int
+    max_new: int
+    lane: int = -1
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    t_arrival: float = 0.0     # run-relative seconds
+    t_admit: float = 0.0       # prefilled + spliced into a lane
+    t_first: float = 0.0       # first generated token on the host
+    t_done: float = 0.0
+    occupancy: float = 0.0     # mean cache fill fraction at completion
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_arrival
+
+    @property
+    def decode_tps(self) -> float:
+        return len(self.tokens) / max(self.t_done - self.t_admit, 1e-9)
+
+
 class ServeLoop:
-    """Minimal continuous batching: fixed decode lanes + request queue.
+    """Lane-granular continuous batching: fixed decode lanes + request queue.
+
+    New-style use::
+
+        loop = ServeLoop(model, params, lanes=4, eos=2, block=8)
+        loop.submit(prompt_a, max_new=64)     # any prompt length ≤ max
+        loop.submit(prompt_b, max_new=16)
+        stats = loop.run()                    # List[RequestStats]
+
+    Lanes are admitted independently (prefill_one + lane_insert), freed on
+    EOS/budget **in-device**, and refilled from the queue mid-flight. The
+    legacy all-lanes API (`admit(prompts)` + `step()`/`step_block()`) drives
+    the same engine with a single full-batch prefill.
 
     `block` sets how many tokens each dispatch decodes: the scanned block
     amortizes launch overhead across `block` tokens, at the cost of up to
     `block - 1` speculative steps after a lane hits EOS/budget (their
-    outputs are dropped by the host-side bookkeeping below).
+    outputs are masked out in-device).
+
+    Prompts are prefilled at their *exact* length, which keeps a
+    lane-inserted prefill bit-identical to a fresh full-batch prefill but
+    compiles one prefill program per distinct length (cached for the
+    process lifetime). Callers with highly diverse traffic should bucket
+    prompt lengths themselves before `submit()` if compile stalls matter.
     """
 
-    def __init__(self, model: Model, params, lanes: int, prompt_len: int,
-                 max_new: int = 64, eos: int = -1, block: int = 1):
+    def __init__(self, model: Model, params, lanes: int,
+                 prompt_len: Optional[int] = None, max_new: int = 64,
+                 eos: int = -1, block: int = 1):
         self.model = model
         self.params = params
         self.lanes = lanes
         self.max_new = max_new
         self.eos = eos
-        self.prompt_len = prompt_len
+        self.prompt_len = prompt_len          # legacy hint; not enforced
         self.block = max(1, block)
-        self._prefill = jax.jit(model.prefill)
+        self._prefill = _prefill_fn(_model_key(model))
+        self._prefill_one = _prefill_one_fn(_model_key(model))
         self.state = None
-        self.remaining = np.zeros(lanes, np.int64)
+        self.tok = None
+        self.active = np.zeros(lanes, bool)
+        self.remaining = np.zeros(lanes, np.int32)
         self.outputs: List[List[int]] = [[] for _ in range(lanes)]
         self.done: List[List[int]] = []
-        self.tok = None
+        self.queue: Deque[Request] = deque()
+        self.stats: Dict[int, RequestStats] = {}
+        self.completed: List[RequestStats] = []
+        self._lane_rid: List[Optional[int]] = [None] * lanes
+        self._next_rid = 0
+        self._t0: Optional[float] = None
+
+    # -- time ----------------------------------------------------------------
+
+    def _now(self) -> float:
+        return 0.0 if self._t0 is None else time.monotonic() - self._t0
+
+    # -- request intake ------------------------------------------------------
+
+    def submit(self, prompt, max_new: Optional[int] = None,
+               arrival: float = 0.0) -> int:
+        """Queue one request; returns its rid. Prompt: [t] token ids."""
+        rid = self._next_rid
+        self._next_rid += 1
+        prompt = np.asarray(prompt)
+        req = Request(rid, prompt,
+                      self.max_new if max_new is None else max_new, arrival)
+        if self.queue and arrival < self.queue[-1].arrival:
+            # keep arrival order (FIFO among ties) — schedule() peeks head
+            idx = next(i for i, r in enumerate(self.queue)
+                       if r.arrival > arrival)
+            self.queue.insert(idx, req)
+        else:
+            self.queue.append(req)
+        self.stats[rid] = RequestStats(rid, len(prompt), req.max_new,
+                                       t_arrival=arrival)
+        return rid
+
+    # -- admission -----------------------------------------------------------
+
+    def _ensure_state(self):
+        if self.state is None:
+            self.state = self.model.init_decode_state(self.lanes)
+            self.tok = jnp.zeros((self.lanes,), jnp.int32)
+
+    def _admit_lane(self, lane: int, req: Request):
+        """Prefill one request and splice it into `lane` of the live state."""
+        self._ensure_state()
+        logits, fresh = self._prefill_one(self.params,
+                                          jnp.asarray(req.prompt))
+        self.state, self.tok = _admit_fn()(self.state, self.tok, lane,
+                                           fresh, logits)
+        self.active[lane] = req.max_new > 0
+        self.remaining[lane] = max(req.max_new, 0)
+        self.outputs[lane] = []
+        self._lane_rid[lane] = req.rid
+        st = self.stats[req.rid]
+        st.lane = lane
+        st.t_admit = self._now()
+        if req.max_new <= 0:                   # prefill-only request
+            st.t_first = st.t_admit            # ttft == prefill completion
+            self._finish_lane(lane, self._now())
+
+    def schedule(self) -> int:
+        """Admit queued, already-arrived requests into free lanes."""
+        n = 0
+        now = self._now()
+        while self.queue and not self.active.all():
+            if self.queue[0].arrival > now:
+                break
+            req = self.queue.popleft()
+            lane = int(np.flatnonzero(~self.active)[0])
+            self._admit_lane(lane, req)
+            n += 1
+        return n
 
     def admit(self, prompts: np.ndarray):
-        """prompts: [lanes, prompt_len] — (re)fill all lanes at once."""
+        """Legacy all-lanes admission: prompts [lanes, prompt_len] are
+        prefilled in one batch (one compile, no lane splicing) and every
+        lane restarts with the shared `max_new` budget."""
+        if self._t0 is None:
+            self._t0 = time.monotonic()
         batch = {"tokens": jnp.asarray(prompts)}
         logits, self.state = self._prefill(self.params, batch)
-        self.tok = jnp.argmax(logits, -1)
-        self.remaining[:] = self.max_new
+        self.tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        self.active[:] = self.max_new > 0
+        self.remaining[:] = max(self.max_new, 0)
         self.outputs = [[] for _ in range(self.lanes)]
+        now = self._now()
+        for lane in range(self.lanes):
+            rid = self._next_rid
+            self._next_rid += 1
+            self._lane_rid[lane] = rid
+            self.stats[rid] = RequestStats(
+                rid, prompts.shape[1], self.max_new, lane=lane,
+                t_arrival=now, t_admit=now)
+
+    # -- decode --------------------------------------------------------------
 
     def step(self) -> bool:
         """One decode step over all lanes; returns True while any lane live."""
         return self.step_block(1)
 
     def step_block(self, steps: int = 0) -> bool:
-        """Decode `steps` (default: self.block) tokens in one dispatch."""
+        """Decode `steps` (default: self.block) tokens in one dispatch.
+
+        Finished lanes stop writing in-device; the host side consumes the
+        (token, emitted) pairs with vectorized numpy — no per-token loop.
+        """
         steps = steps or self.block
-        if self.state is None or not (self.remaining > 0).any():
-            return False
-        fn = _jit_decode_block(self.model, steps)
-        self.state, self.tok, toks = fn(self.params, self.state, self.tok)
-        host = np.asarray(toks)                             # [steps, lanes]
-        for t in range(host.shape[0]):
-            for i in range(self.lanes):
-                if self.remaining[i] > 0:
-                    self.outputs[i].append(int(host[t, i]))
-                    self.remaining[i] -= 1
-                    if host[t, i] == self.eos:
-                        self.remaining[i] = 0
-        return bool((self.remaining > 0).any())
+        if self.state is None or not self.active.any():
+            return bool(self.active.any())
+        fn = _masked_block_fn(_model_key(self.model), steps, self.eos)
+        was_active = self.active.copy()
+        self.state, self.tok, active, rem, toks, emitted = fn(
+            self.params, self.state, self.tok,
+            jnp.asarray(self.active), jnp.asarray(self.remaining))
+        host_toks = np.asarray(toks)                       # [steps, lanes]
+        host_emit = np.asarray(emitted)                    # [steps, lanes]
+        self.active = np.asarray(active).copy()
+        self.remaining = np.asarray(rem).astype(np.int32)
+        now = self._now()
+        for lane in np.flatnonzero(host_emit.any(axis=0)):
+            lane = int(lane)
+            new = host_toks[host_emit[:, lane], lane].tolist()
+            if not self.outputs[lane]:
+                rid = self._lane_rid[lane]
+                if rid is not None:
+                    self.stats[rid].t_first = now
+            self.outputs[lane].extend(new)
+        for lane in np.flatnonzero(was_active & ~self.active):
+            self._finish_lane(int(lane), now)
+        return bool(self.active.any())
+
+    def _finish_lane(self, lane: int, now: float):
+        rid = self._lane_rid[lane]
+        if rid is None:
+            return
+        st = self.stats[rid]
+        st.tokens = list(self.outputs[lane])
+        st.t_done = now
+        st.occupancy = self._lane_occupancy(lane)
+        self.completed.append(st)
+        self.done.append(st.tokens)
+        self._lane_rid[lane] = None
+
+    def _lane_occupancy(self, lane: int) -> float:
+        kv = self.state.kv if self.state is not None else None
+        if kv is None:
+            return 0.0
+        fill = np.asarray(kv.fill)                         # [L, lanes]
+        return float(fill[:, lane].mean() / kv.slots)
+
+    # -- driver ---------------------------------------------------------------
+
+    def run(self) -> List[RequestStats]:
+        """Drive until the queue is drained and every lane is idle."""
+        if self._t0 is None:
+            self._t0 = time.monotonic()
+        while self.queue or self.active.any():
+            self.schedule()
+            if not self.active.any():
+                if not self.queue:     # e.g. a trailing prefill-only request
+                    continue
+                wait = self.queue[0].arrival - self._now()
+                if wait > 0:
+                    time.sleep(min(wait, 0.05))
+                continue
+            self.step_block()
+        return self.completed
+
+    def aggregate(self) -> Dict[str, float]:
+        """Serving metrics over completed requests."""
+        if not self.completed:
+            return {"requests": 0.0, "tokens": 0.0, "wall_s": 0.0,
+                    "tokens_per_s": 0.0, "mean_latency_s": 0.0,
+                    "mean_occupancy": 0.0}
+        toks = sum(len(s.tokens) for s in self.completed)
+        t_end = max(s.t_done for s in self.completed)
+        t_begin = min(s.t_arrival for s in self.completed)
+        wall = max(t_end - t_begin, 1e-9)
+        return {
+            "requests": float(len(self.completed)),
+            "tokens": float(toks),
+            "wall_s": wall,
+            "tokens_per_s": toks / wall,
+            "mean_latency_s": float(np.mean([s.latency
+                                             for s in self.completed])),
+            "mean_occupancy": float(np.mean([s.occupancy
+                                             for s in self.completed])),
+        }
 
 
 def main(argv=None):
@@ -155,6 +462,9 @@ def main(argv=None):
                     help="single-pass fused decode engine (unicaim only)")
     ap.add_argument("--no-scan", action="store_true",
                     help="per-token Python loop instead of lax.scan")
+    ap.add_argument("--serve", action="store_true",
+                    help="continuous-batching demo: 2x batch staggered "
+                         "variable-length requests through ServeLoop")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -173,8 +483,29 @@ def main(argv=None):
         prune = baselines.dense(args.prompt_len + args.new_tokens)
     model = Model(cfg, prune)
     params = model.init(jax.random.PRNGKey(0))
-    prompts = np.random.default_rng(0).integers(
-        0, cfg.vocab_size, (args.batch, args.prompt_len))
+    rng = np.random.default_rng(0)
+
+    if args.serve:
+        loop = ServeLoop(model, params, lanes=args.batch,
+                         max_new=args.new_tokens, block=8)
+        lens = (args.prompt_len, max(8, args.prompt_len // 2))
+        for i in range(2 * args.batch):
+            loop.submit(rng.integers(0, cfg.vocab_size, lens[i % len(lens)]),
+                        max_new=args.new_tokens // (1 + i % 2))
+        t0 = time.time()
+        stats = loop.run()
+        dt = time.time() - t0
+        agg = loop.aggregate()
+        for s in stats:
+            print(f"  req {s.rid}: lane={s.lane} prompt={s.prompt_len} "
+                  f"new={len(s.tokens)} latency={s.latency:.2f}s "
+                  f"occ={s.occupancy:.2f}")
+        print(f"arch={cfg.name} policy={args.policy} fused={args.fused} "
+              f"served {len(stats)} reqs on {args.batch} lanes in {dt:.2f}s "
+              f"({agg['tokens_per_s']:.1f} tok/s)")
+        return
+
+    prompts = rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len))
     batch = {"tokens": jnp.asarray(prompts)}
     t0 = time.time()
     if args.no_scan:

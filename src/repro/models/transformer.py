@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from repro.runtime.flags import xscan
 
 from repro.configs.base import ModelConfig, PruneConfig
+from repro.core import cache as kvcache
 from repro.core.cache import KVCache, init_cache
 from repro.models import layers as L
 from repro.models.attention_layer import (attention_decode, attention_prefill,
@@ -37,6 +38,51 @@ class DecodeState(NamedTuple):
     kv: Optional[KVCache]            # stacked [L_attn, ...]
     ssm: Optional[SSMState]          # stacked [L_ssm, ...]
     cross: Optional[Tuple[jax.Array, jax.Array]]  # [L_dec, B, Hk, S, dh]
+
+
+# ---------------------------------------------------------------------------
+# Per-lane DecodeState surgery (continuous batching).
+#
+# Every stacked state array carries layers on axis 0 and batch on axis 1, so
+# one lane of a live batched DecodeState can be sliced out or replaced by a
+# freshly prefilled batch-1 state without disturbing the other lanes. These
+# are jit-safe (the lane index may be a traced scalar) and cover all three
+# state families: the KV cache (every field, via the matching core/cache
+# helpers), SSM recurrent state, and enc-dec cross K/V.
+# ---------------------------------------------------------------------------
+
+
+def lane_slice(state: DecodeState, lane) -> DecodeState:
+    """One lane of a batched DecodeState as a batch-1 DecodeState."""
+    def sl(a):
+        return jax.lax.dynamic_slice_in_dim(a, lane, 1, axis=1)
+    kv = (kvcache.lane_slice(state.kv, lane, batch_axis=1)
+          if state.kv is not None else None)
+    return DecodeState(kv=kv, ssm=jax.tree.map(sl, state.ssm),
+                       cross=jax.tree.map(sl, state.cross))
+
+
+def lane_insert(state: DecodeState, lane, fresh: DecodeState) -> DecodeState:
+    """Splice a batch-1 `fresh` state (e.g. from `prefill_one`) into lane
+    `lane` of a live batched DecodeState."""
+    def ins(a, f):
+        return jax.lax.dynamic_update_slice_in_dim(
+            a, f.astype(a.dtype), lane, axis=1)
+    kv = (kvcache.lane_insert(state.kv, lane, fresh.kv, batch_axis=1)
+          if state.kv is not None else None)
+    return DecodeState(kv=kv, ssm=jax.tree.map(ins, state.ssm, fresh.ssm),
+                       cross=jax.tree.map(ins, state.cross, fresh.cross))
+
+
+def lane_select(active: jax.Array, new: DecodeState,
+                old: DecodeState) -> DecodeState:
+    """Per-lane merge: lanes where `active` ([B] bool) take `new`, the rest
+    keep `old` — lets finished lanes stop contributing state writes inside a
+    scanned decode block (in-device termination)."""
+    def sel(n, o):
+        m = active.reshape((1, active.shape[0]) + (1,) * (n.ndim - 2))
+        return jnp.where(m, n, o)
+    return jax.tree.map(sel, new, old)
 
 
 def _stack_init(fn, key, n: int):
@@ -503,6 +549,16 @@ class Model:
             state = state._replace(kv=kv)
         logits = self._logits(params, x[:, -1:])[:, 0]
         return logits, state
+
+    def prefill_one(self, params, tokens) -> Tuple[jax.Array, DecodeState]:
+        """Prefill a single request. tokens: [t] (any t ≤ max_seq_len) →
+        (logits [V], batch-1 DecodeState) ready for `lane_insert` into a
+        live batched state. Each distinct prompt length traces/compiles its
+        own program under jit — serving engines bucket lengths to bound
+        that."""
+        tokens = jnp.asarray(tokens)
+        logits, state = self.prefill(params, {"tokens": tokens[None]})
+        return logits[0], state
 
     def _prefill_hybrid(self, params, x, pos, state: DecodeState):
         cfg = self.cfg
