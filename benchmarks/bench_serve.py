@@ -3,8 +3,12 @@ old admit-all-lanes loop, on the same staggered request set.
 
 Rows (CSV: name,us_per_call,derived):
   serve_static_<tag>        wall µs; derived useful-token tok/s
-  serve_continuous_<tag>    wall µs; derived tok/s, mean latency, occupancy
+  serve_continuous_<tag>    wall µs; derived tok/s, mean latency, occupancy,
+                            p99 ttft, prefill compile (shape) count
   serve_speedup_<tag>       continuous-vs-static useful-token throughput
+  serve_exactlen_<tag>      legacy exact-length prefills (compile-count
+                            comparison row: one program per distinct length)
+  serve_chunked_<tag>       Sarathi-style sliced-prefill admission
   serve_load_<tag>_r<rate>  offered-load sweep (requests arrive rate/s)
 
 'Useful tokens' counts each request's own `max_new`: the old loop forces
@@ -13,6 +17,9 @@ prompts, so its excess generated tokens are waste, not throughput. Both
 engines run the same jitted scanned decode block — the comparison isolates
 the *scheduling* win (lane recycling + right-sized prefills), not kernel
 differences.
+
+`run()` returns a machine-readable summary (tok/s, p50/p99 ttft, prefill
+compile count) that `benchmarks/run.py --smoke` writes to BENCH_serve.json.
 """
 from __future__ import annotations
 
@@ -60,21 +67,28 @@ def _run_static(model, params, reqs, lanes):
     return useful, time.perf_counter() - t0
 
 
-def _run_continuous(model, params, reqs, lanes, rate=None):
-    loop = ServeLoop(model, params, lanes=lanes, eos=-1, block=BLOCK)
+def _run_continuous(model, params, reqs, lanes, rate=None, buckets="auto",
+                    chunk_prefill=0):
+    loop = ServeLoop(model, params, lanes=lanes, eos=-1, block=BLOCK,
+                     buckets=buckets, chunk_prefill=chunk_prefill)
     for i, (prompt, mn) in enumerate(reqs):
         loop.submit(prompt, max_new=mn,
                     arrival=0.0 if rate is None else i / rate)
     t0 = time.perf_counter()
     loop.run()
-    return loop.aggregate(), time.perf_counter() - t0
+    agg = loop.aggregate()
+    agg["prefill_programs"] = float(loop.prefill_programs()["loop_shapes"])
+    return agg, time.perf_counter() - t0
 
 
 def run():
     cfg = reduced(get_config("granite-3-2b"))
     lanes = 2 if common.SMOKE else 4
     n = 8 if common.SMOKE else 16
-    lens = (24, 48) if common.SMOKE else (32, 64, 96)
+    # >= 8 distinct prompt lengths: the compile-bound rows need realistic
+    # mixed traffic, not two widths
+    lens = ((9, 17, 24, 31, 40, 47, 48, 63) if common.SMOKE
+            else (9, 17, 24, 31, 40, 47, 63, 64, 81, 96))
     budgets = (6, 40) if common.SMOKE else (8, 16, 48)
     uni = baselines.unicaim(heavy=48, reserve=16, select_k=16,
                             sink_tokens=2, recent_window=8)
@@ -88,6 +102,7 @@ def run():
         ]
     reqs = _request_set(cfg.vocab_size, n, lens, budgets)
     params = None
+    summary = {}
     for tag, prune in policies:
         model = Model(cfg, prune)
         if params is None:
@@ -108,9 +123,40 @@ def run():
         emit(f"serve_continuous_{tag}", dt_c * 1e6,
              f"tok_s={agg['tokens'] / dt_c:.1f};"
              f"mean_latency_s={agg['mean_latency_s']:.3f};"
-             f"occ={agg['mean_occupancy']:.2f}")
+             f"occ={agg['mean_occupancy']:.2f};"
+             f"p99_ttft_s={agg['p99_ttft_s']:.3f};"
+             f"prefill_compiles={agg['prefill_programs']:.0f}")
         emit(f"serve_speedup_{tag}", 0.0,
              f"continuous_vs_static={dt_s / dt_c:.2f}x")
+        if tag == "unicaim":
+            summary = {
+                "tok_s": agg["tokens"] / dt_c,
+                "p50_ttft_s": agg["p50_ttft_s"],
+                "p99_ttft_s": agg["p99_ttft_s"],
+                "prefill_compiles": agg["prefill_programs"],
+                "requests": agg["requests"],
+                "distinct_prompt_lens": float(len(set(lens))),
+            }
+            # compile-count comparison: legacy exact-length prefills trace
+            # one program per distinct prompt length
+            agg_e, dt_e = _run_continuous(model, params, reqs, lanes,
+                                          buckets=None)
+            emit(f"serve_exactlen_{tag}", dt_e * 1e6,
+                 f"tok_s={agg_e['tokens'] / dt_e:.1f};"
+                 f"p99_ttft_s={agg_e['p99_ttft_s']:.3f};"
+                 f"prefill_compiles={agg_e['prefill_programs']:.0f}")
+            summary["prefill_compiles_exactlen"] = agg_e["prefill_programs"]
+            # Sarathi-style sliced admission (prefill/decode interleaving)
+            _run_continuous(model, params, reqs, lanes, chunk_prefill=16)
+            agg_c, dt_ch = _run_continuous(model, params, reqs, lanes,
+                                           chunk_prefill=16)
+            emit(f"serve_chunked_{tag}", dt_ch * 1e6,
+                 f"tok_s={agg_c['tokens'] / dt_ch:.1f};"
+                 f"mean_latency_s={agg_c['mean_latency_s']:.3f};"
+                 f"p99_ttft_s={agg_c['p99_ttft_s']:.3f};"
+                 f"prefill_compiles={agg_c['prefill_programs']:.0f}")
+            summary["chunked_tok_s"] = agg_c["tokens"] / dt_ch
+            summary["chunked_p99_ttft_s"] = agg_c["p99_ttft_s"]
         if not common.SMOKE and tag == "unicaim":
             for rate in (20.0, 5.0):
                 agg, _ = _run_continuous(model, params, reqs, lanes,
@@ -118,6 +164,7 @@ def run():
                 emit(f"serve_load_{tag}_r{rate:g}", 0.0,
                      f"tok_s={agg['tokens_per_s']:.1f};"
                      f"mean_latency_s={agg['mean_latency_s']:.3f}")
+    return summary
 
 
 if __name__ == "__main__":

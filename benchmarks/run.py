@@ -4,10 +4,16 @@ Prints ``name,us_per_call,derived`` CSV rows (EXPERIMENTS.md indexes them).
   Table II → bench_aedp        Fig 10 → bench_footprint
   Fig 11  → bench_energy       Fig 12 → bench_latency
   Fig 13  → bench_accuracy     Fig 9  → bench_fidelity
+
+A bench whose ``run()`` returns a dict additionally gets a
+machine-readable ``BENCH_<name>.json`` written next to the cwd under
+``--smoke`` (CI uploads these — the serving trajectory lives in
+``BENCH_serve.json``: tok/s, p50/p99 ttft, prefill compile counts).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -35,7 +41,12 @@ def main(argv=None) -> None:
     for name in wanted:
         mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
         t0 = time.time()
-        mod.run()
+        summary = mod.run()
+        if args.smoke and isinstance(summary, dict) and summary:
+            path = f"BENCH_{name}.json"
+            with open(path, "w") as f:
+                json.dump(summary, f, indent=2, sort_keys=True)
+            print(f"wrote {path}", file=sys.stderr)
         print(f"bench_{name}_total,{(time.time() - t0) * 1e6:.0f},done",
               file=sys.stderr)
 

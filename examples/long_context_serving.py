@@ -45,7 +45,10 @@ def main():
         model = Model(cfg, prune)
         if params is None:
             params = model.init(jax.random.PRNGKey(0))
-        loop = ServeLoop(model, params, lanes=LANES, block=8)
+        # bucketed prefill (default) bounds the prefill jit cache;
+        # chunk_prefill=64 interleaves long prefills with decode blocks
+        loop = ServeLoop(model, params, lanes=LANES, block=8,
+                         chunk_prefill=64)
         for prompt, (_, max_new, arrival) in zip(prompts, REQUESTS):
             loop.submit(prompt, max_new=max_new, arrival=arrival)
         stats = loop.run()
@@ -56,12 +59,14 @@ def main():
               f"kv={kv_bytes / 2**20:6.1f}MiB "
               f"{agg['tokens_per_s']:7.1f} tok/s  "
               f"mean_latency={agg['mean_latency_s']:.2f}s "
-              f"occ={agg['mean_occupancy']:.2f}")
+              f"p99_ttft={agg['p99_ttft_s']:.2f}s "
+              f"occ={agg['mean_occupancy']:.2f} "
+              f"prefill_programs={loop.prefill_programs()['loop_shapes']}")
         for s in sorted(stats, key=lambda s: s.rid):
             print(f"    req {s.rid}: lane={s.lane} prompt={s.prompt_len:4d} "
+                  f"bucket={s.bucket:4d} chunks={s.prefill_chunks} "
                   f"new={len(s.tokens):3d} latency={s.latency:5.2f}s "
-                  f"ttft={s.t_first - s.t_arrival:5.2f}s "
-                  f"occ={s.occupancy:.2f}")
+                  f"ttft={s.ttft:5.2f}s occ={s.occupancy:.2f}")
 
 
 if __name__ == "__main__":

@@ -300,17 +300,24 @@ def decode_attention(cache: KVCache, q: jax.Array, k_new: jax.Array,
     s_approx = scoring.approx_scores(qq, qs, mirror, cache.kscale,
                                      cache.valid)                  # [B,Hq,S]
     grouped = topk.gqa_group_scores(s_approx, hk)                  # [B,Hk,S]
-    biased = topk.apply_selection_bias(
-        grouped, protected_mask(cache, prune), ~cache.valid)
+    prot = protected_mask(cache, prune)
 
     if prune.select_mode == "threshold":
-        # CAM race semantics: masked exact attention, no gather
-        mask = topk.threshold_race(biased, prune.select_k,
-                                   prune.threshold_iters)          # [B,Hk,S]
+        # CAM race semantics: masked exact attention, no gather. The race
+        # runs over finite *evictable* scores only — protected slots (the
+        # ±1e30 sentinels of apply_selection_bias) would blow the binary
+        # search's resolution out to ~1e27 — and the protected mask is
+        # unioned back in, with the per-row target shrunk accordingly.
+        evictable = cache.valid & ~prot
+        k_dyn = jnp.maximum(
+            prune.select_k - jnp.sum(prot, axis=-1, keepdims=True), 1)
+        mask = topk.threshold_race(grouped, k_dyn, prune.threshold_iters,
+                                   eligible=evictable) | prot      # [B,Hk,S]
         g = hq // hk
         mask_q = jnp.repeat(mask, g, axis=1) if g > 1 else mask
         out, _ = _dense_attend(cache, q, head_dim, mask=mask_q)
     elif prune.select_blocks > 1:
+        biased = topk.apply_selection_bias(grouped, prot, ~cache.valid)
         nb = prune.select_blocks
         s = biased.shape[-1]
         assert s % nb == 0 and prune.select_k % nb == 0, (s, prune.select_k)
@@ -326,6 +333,7 @@ def decode_attention(cache: KVCache, q: jax.Array, k_new: jax.Array,
             _, idx = topk.exact_topk(biased_b, k_loc)    # [B,Hk,nb,k_loc]
             out = _gathered_attend_blocked(cache, q, idx, head_dim)
     else:
+        biased = topk.apply_selection_bias(grouped, prot, ~cache.valid)
         _, idx = topk.exact_topk(biased, prune.select_k)           # [B,Hk,k]
         out, _, _ = _gathered_attend(cache, q, idx, head_dim)
 
@@ -346,7 +354,8 @@ def decode_attention(cache: KVCache, q: jax.Array, k_new: jax.Array,
 
 def chunked_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                              chunk: int = 512, obs_window: int = 0,
-                             scale: float = None,
+                             scale: Optional[float] = None,
+                             length: Optional[jax.Array] = None,
                              ) -> Tuple[jax.Array, jax.Array]:
     """Causal attention over the full prompt, scanned over query chunks.
 
@@ -356,6 +365,15 @@ def chunked_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     obs_window > 0 restricts accumulation to the last `obs_window` query rows
     (SnapKV-style); 0 accumulates over all rows (H2O-style, paper default).
     Never materialises the N×N matrix — one [*, chunk, N] tile at a time.
+
+    `length` ([B] int32, optional) marks the true per-lane prompt length
+    when the input is right-padded to a shape-stable bucket: rows at or
+    beyond `length` never accumulate into the column sums (so pad tokens
+    add zero charge-domain mass), the observation window anchors at the
+    true length, and pad *columns* are already unreachable for every real
+    row via the causal mask (pads sit at the end). Outputs at pad rows are
+    garbage and must be ignored by the caller. With `length=None` the full
+    width is live — bit-identical to the unbucketed behaviour.
     """
     b, hq, n, d = q.shape
     hk = k.shape[1]
@@ -373,6 +391,9 @@ def chunked_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     n_chunks = n // chunk
     if scale is None:
         scale = 1.0 / (d ** 0.5)
+    if length is None:
+        length = jnp.full((b,), n_real, jnp.int32)
+    length = jnp.minimum(length.astype(jnp.int32), n_real)
     # K/V stay in their storage dtype (bf16 in production) — the MXU
     # accumulates in f32 via preferred_element_type; re-reading full K/V per
     # chunk at 2 bytes instead of 4 halves the dominant HBM term (§Perf)
@@ -398,10 +419,10 @@ def chunked_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         out_c = jax.lax.dot_general(
             p_g, v, dimension_numbers=(((4,), (2,)), ((0, 1), (0, 1))),
             preferred_element_type=jnp.float32)                    # [B,Hk,g,T,dv]
-        live = row < n_real                # exclude padded query rows
+        live = row[None, :] < length[:, None]   # pad rows add no mass
         if obs_window > 0:
-            live = live & (row >= (n_real - obs_window))
-        w = jnp.where(live, 1.0, 0.0)[None, None, None, :, None]
+            live = live & (row[None, :] >= (length[:, None] - obs_window))
+        w = jnp.where(live, 1.0, 0.0)[:, None, None, :, None]
         acc = acc + jnp.sum(p_g.astype(jnp.float32) * w, axis=(2, 3))
         return acc, out_c.reshape(b, hq, chunk, -1)
 
@@ -409,3 +430,57 @@ def chunked_causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     acc, outs = xscan(body, acc0, (jnp.arange(n_chunks), q_chunks))
     out = outs.transpose(1, 2, 0, 3, 4).reshape(b, hq, n, -1)
     return out[:, :, :n_real], acc[:, :, :n_real]
+
+
+def prefill_chunk_attend(q_c: jax.Array, k_buf: jax.Array, v_buf: jax.Array,
+                         row0: jax.Array, length: jax.Array,
+                         scale: Optional[float] = None,
+                         obs_window: int = 0,
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """One prompt chunk attending into the streamed prefill K/V buffer.
+
+    The chunked-prefill (Sarathi-style admission) analogue of one `body`
+    pass of `chunked_causal_attention`: queries for absolute rows
+    [row0, row0+C) attend causally over the whole fixed-size buffer
+    [B, Hk, N, ·] whose first row0+C rows have been written. Unwritten
+    columns sit strictly in the causal future of every chunk row, so the
+    causal mask alone keeps them out — the computation is bit-identical to
+    the same rows of a whole-prompt `chunked_causal_attention` with
+    chunk=C over the same bucket N (same reduction widths, same masked
+    exponentials), which is what makes time-sliced admission numerically
+    invisible.
+
+    q_c: [B, Hq, C, d]; k_buf/v_buf: [B, Hk, N, ·]; row0: scalar int32
+    (may be traced — one compiled program per (C, N) pair); length: [B]
+    true prompt lengths. Returns (out [B, Hq, C, dv], col_acc [B, Hk, N]
+    — this chunk's contribution to the accumulated column sums).
+    """
+    b, hq, c, d = q_c.shape
+    hk, n = k_buf.shape[1], k_buf.shape[2]
+    g = hq // hk
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    q_c = q_c.astype(k_buf.dtype)
+    row = row0 + jnp.arange(c)
+    col = jnp.arange(n)
+    q_g = q_c.reshape(b, hk, g, c, d)
+    logits = jax.lax.dot_general(
+        q_g, k_buf, dimension_numbers=(((4,), (3,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.float32)                        # [B,Hk,g,C,N]
+    logits = logits.reshape(b, hq, c, n)
+    causal = row[:, None] >= col[None, :]
+    logits = jnp.where(causal[None, None], logits * scale, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    probs = e / jnp.maximum(z, 1e-30)                              # [B,Hq,C,N]
+    p_g = probs.reshape(b, hk, g, c, n).astype(v_buf.dtype)
+    out_c = jax.lax.dot_general(
+        p_g, v_buf, dimension_numbers=(((4,), (2,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.float32)                        # [B,Hk,g,C,dv]
+    live = row[None, :] < length[:, None]
+    if obs_window > 0:
+        live = live & (row[None, :] >= (length[:, None] - obs_window))
+    w = jnp.where(live, 1.0, 0.0)[:, None, None, :, None]
+    col_acc = jnp.sum(p_g.astype(jnp.float32) * w, axis=(2, 3))
+    return out_c.reshape(b, hq, c, -1), col_acc

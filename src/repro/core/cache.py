@@ -208,7 +208,8 @@ def write_token(cache: KVCache, k_new: jax.Array,
 
 def prefill_fill(cache: KVCache, k_full: jax.Array,
                  v_full: Optional[jax.Array], acc_scores: jax.Array,
-                 prune: PruneConfig) -> KVCache:
+                 prune: PruneConfig,
+                 length: Optional[jax.Array] = None) -> KVCache:
     """One-shot static pruning after prefill (§III-A.1).
 
     k_full: [B, Hk, N, dh] prompt keys; acc_scores: [B, Hk, N] accumulated
@@ -216,27 +217,50 @@ def prefill_fill(cache: KVCache, k_full: jax.Array,
     heaviest tokens per kv-head (sinks + recent always kept), scattered into
     slots [0..H).  N >= heavy_budget is required (configs guarantee it);
     if the policy is dense/streaming the first min(N, S) tokens are kept.
+
+    `length` ([B] int32, optional) is the true per-lane prompt length when
+    the inputs are right-padded to a shape-stable bucket N: the sink/recent
+    bias anchors on the true length, padded tokens rank -inf so they can
+    never win the static top-k, any pad that top-k is nevertheless forced
+    to hand back (prompt shorter than the keep budget) is stored as an
+    all-zero INVALID slot — exactly what an exact-length prefill followed
+    by `jnp.pad` produces — and `pos`/`fill`/`step` reflect the real
+    length, not the bucket.
     """
     b, hk, n, dh = k_full.shape
     s = cache.slots
     keep = min(prune.heavy_budget, n, s)
+    bucketed = length is not None
+    if length is None:
+        length = jnp.full((b,), n, jnp.int32)
+    length = jnp.minimum(length.astype(jnp.int32), n)
 
     pos_ids = jnp.arange(n)
+    is_pad = pos_ids[None, :] >= length[:, None]                   # [B,N]
     if prune.policy in ("unicaim", "h2o"):
-        bias = jnp.where(pos_ids < prune.sink_tokens, jnp.inf, 0.0)
-        bias = bias + jnp.where(pos_ids >= n - prune.recent_window, jnp.inf, 0.0)
-        ranked = acc_scores + bias[None, None, :]
+        sink = pos_ids[None, :] < prune.sink_tokens
+        recent = pos_ids[None, :] >= (length[:, None] - prune.recent_window)
+        bias = (jnp.where(sink, jnp.inf, 0.0)
+                + jnp.where(recent, jnp.inf, 0.0))                 # [B,N]
+        ranked = acc_scores + bias[:, None, :]
     else:
         # dense/streaming keep the most recent tokens (+ sinks for streaming)
         ranked = pos_ids.astype(jnp.float32)[None, None, :] * jnp.ones((b, hk, 1))
         if prune.policy == "streaming":
             ranked = ranked + jnp.where(pos_ids < prune.sink_tokens,
                                         jnp.inf, 0.0)[None, None, :]
+    # padded tokens never win (where, not addition: bias may already be inf)
+    ranked = jnp.where(is_pad[:, None, :], -jnp.inf, ranked)
     _, idx = jax.lax.top_k(ranked, keep)                           # [B,Hk,keep]
     idx = jnp.sort(idx, axis=-1)                                   # keep order
 
-    def gather(x):  # [B,Hk,N,*] → [B,Hk,keep,*]
-        return jnp.take_along_axis(x, idx[..., None], axis=2)
+    # pad winners (possible only when length < keep) become inert slots
+    keep_n = jnp.minimum(length, keep)                             # [B]
+    slot_ok = jnp.arange(keep)[None, None, :] < keep_n[:, None, None]
+
+    def gather(x):  # [B,Hk,N,*] → [B,Hk,keep,*] (zeroed at inert slots)
+        y = jnp.take_along_axis(x, idx[..., None], axis=2)
+        return jnp.where(slot_ok[..., None], y, 0) if bucketed else y
 
     slot_pad = s - keep
     kq, kscale, vscale = cache.kq, cache.kscale, cache.vscale
@@ -262,12 +286,14 @@ def prefill_fill(cache: KVCache, k_full: jax.Array,
             kscale = jnp.pad(sn, ((0, 0), (0, 0), (0, slot_pad)))
 
     acc_sel = jnp.take_along_axis(acc_scores, idx, axis=2)
+    valid_sel = jnp.broadcast_to(slot_ok, (b, hk, keep))
+    acc_sel = jnp.where(valid_sel, acc_sel, 0.0)
+    pos_sel = jnp.where(valid_sel, idx, -1)
     acc = jnp.pad(acc_sel.astype(jnp.float32), ((0, 0), (0, 0), (0, slot_pad)))
-    valid = jnp.pad(jnp.ones((b, hk, keep), jnp.bool_),
-                    ((0, 0), (0, 0), (0, slot_pad)))
-    pos = jnp.pad(idx.astype(jnp.int32), ((0, 0), (0, 0), (0, slot_pad)),
+    valid = jnp.pad(valid_sel, ((0, 0), (0, 0), (0, slot_pad)))
+    pos = jnp.pad(pos_sel.astype(jnp.int32), ((0, 0), (0, 0), (0, slot_pad)),
                   constant_values=-1)
     return cache._replace(
         k=k, v=v, kq=kq, kscale=kscale, vscale=vscale, acc=acc, valid=valid,
-        pos=pos, fill=jnp.full((b,), keep, jnp.int32),
-        step=jnp.full((b,), n, jnp.int32))
+        pos=pos, fill=keep_n.astype(jnp.int32),
+        step=length.astype(jnp.int32))

@@ -5,7 +5,7 @@ attention column sums, and fills the fixed-slot cache with the heavy tokens.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 
@@ -16,11 +16,19 @@ from repro.core.cache import KVCache, prefill_fill
 
 def prefill_and_prune(cache: KVCache, q: jax.Array, k: jax.Array,
                       v: jax.Array, prune: PruneConfig,
-                      chunk: int = 512) -> Tuple[KVCache, jax.Array]:
-    """q: [B,Hq,N,d]; k/v: [B,Hk,N,d] → (pruned cache, prefill out)."""
+                      chunk: int = 512,
+                      length: Optional[jax.Array] = None,
+                      ) -> Tuple[KVCache, jax.Array]:
+    """q: [B,Hq,N,d]; k/v: [B,Hk,N,d] → (pruned cache, prefill out).
+
+    `length` ([B] int32, optional): true per-lane prompt lengths when the
+    inputs are right-padded to a shape-stable bucket N — pad rows/columns
+    neither attend, accumulate, nor enter the static top-k.
+    """
     out, acc = chunked_causal_attention(
-        q, k, v, chunk=chunk, obs_window=prune.prefill_obs_window)
-    cache = prefill_fill(cache, k, v, acc, prune)
+        q, k, v, chunk=chunk, obs_window=prune.prefill_obs_window,
+        length=length)
+    cache = prefill_fill(cache, k, v, acc, prune, length=length)
     return cache, out
 
 

@@ -16,6 +16,8 @@ riders on the CAM-mode output (see DESIGN.md §7).
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
@@ -27,29 +29,57 @@ def exact_topk(scores: jax.Array, k: int):
     return jax.lax.top_k(scores, k)
 
 
-def threshold_race(scores: jax.Array, k: int, iters: int = 8) -> jax.Array:
+def threshold_race(scores: jax.Array, k, iters: int = 8,
+                   eligible: Optional[jax.Array] = None) -> jax.Array:
     """CAM-style selection: binary-search a threshold so ~k survive.
 
     Mirrors the I_Ref = (k+1)·I_dyn comparator: each iteration checks how
     many lines are still above threshold and tightens the reference.
     Returns a boolean mask over the last axis with >= 1 and ~k True entries.
+
+    `k` may be an int or an int array broadcastable against the count
+    ([..., 1]) — per-row targets when protected slots eat into the budget.
+
+    `eligible` (optional [..., S] bool) restricts BOTH the search range and
+    the returned mask to those entries. This matters when callers inject
+    sentinel biases (±1e30 from `apply_selection_bias`): a binary search
+    over [-1e30, 1e30] has ~1e27 resolution after 8 halvings, so every
+    finite score lands in one bucket and the race degenerates to
+    keep-everything. Racing only the finite, evictable scores keeps the
+    threshold resolution at the scale of the actual score distribution;
+    the caller unions the protected mask back in afterwards.
     """
-    lo = jnp.min(scores, axis=-1, keepdims=True)
-    hi = jnp.max(scores, axis=-1, keepdims=True)
+    if eligible is None:
+        lo = jnp.min(scores, axis=-1, keepdims=True)
+        hi = jnp.max(scores, axis=-1, keepdims=True)
+    else:
+        lo = jnp.min(jnp.where(eligible, scores, jnp.inf), -1, keepdims=True)
+        hi = jnp.max(jnp.where(eligible, scores, -jnp.inf), -1, keepdims=True)
+        # no eligible entries → empty range; mask below comes out empty
+        lo = jnp.where(jnp.isfinite(lo), lo, 0.0)
+        hi = jnp.where(jnp.isfinite(hi), hi, 0.0)
+
+    def count_ge(thr):
+        ge = scores >= thr
+        if eligible is not None:
+            ge = ge & eligible
+        return ge
 
     def body(_, lo_hi):
         lo, hi = lo_hi
         mid = 0.5 * (lo + hi)
-        count = jnp.sum(scores >= mid, axis=-1, keepdims=True)
+        count = jnp.sum(count_ge(mid), axis=-1, keepdims=True)
         # too many survivors -> raise threshold; too few -> lower it
         lo = jnp.where(count > k, mid, lo)
         hi = jnp.where(count > k, hi, mid)
         return lo, hi
 
     lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
-    mask = scores >= lo
+    mask = count_ge(lo)
     # guarantee at least one survivor (the max always survives)
-    top = scores >= jnp.max(scores, axis=-1, keepdims=True)
+    top = count_ge(jnp.max(jnp.where(eligible, scores, -jnp.inf)
+                           if eligible is not None else scores,
+                           axis=-1, keepdims=True))
     return mask | top
 
 

@@ -11,11 +11,15 @@ XLA fallback pays that round-trip; see EXPERIMENTS.md §Perf).
   q   [BH, N, d]  per-q-head queries (BH = B·Hq)
   k   [BK, N, d]  per-kv-head keys   (BK = B·Hk; index map shares a kv head
   v   [BK, N, d]   across its GQA group, no expansion copy)
-  out [BH, N, d]  attention output
+  len [BH, 1] i32 true row length (bucketed prefill: N is a shape bucket,
+                  rows >= len are right-padding and add no column mass)
+  out [BH, N, d]  attention output (garbage at pad rows — caller slices)
   acc [BH, N] f32 column sums of attention probabilities (group-sum outside)
 
 Grid: (BH, Q_blocks, 2·K_blocks) — kb < K_blocks: flash pass;
 kb >= K_blocks: column-accumulation pass using the finalised (m, l).
+Pad *columns* never receive mass from real rows via the causal mask (pads
+sit at the end); pad *rows* are excluded from the accumulation pass.
 """
 from __future__ import annotations
 
@@ -29,7 +33,7 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _flash_prefill_kernel(q_ref, k_ref, v_ref, out_ref, acc_ref,
+def _flash_prefill_kernel(q_ref, k_ref, v_ref, len_ref, out_ref, acc_ref,
                           m_ref, l_ref, o_ref, col_ref,
                           *, scale, block_q, block_k, nkb, nqb, n):
     qb = pl.program_id(1)
@@ -77,8 +81,10 @@ def _flash_prefill_kernel(q_ref, k_ref, v_ref, out_ref, acc_ref,
 
         @pl.when(phase2)
         def _cols():
-            # exact normalised probabilities with the finalised stats
+            # exact normalised probabilities with the finalised stats;
+            # right-padded query rows contribute no column mass
             p = jnp.exp(s - m_ref[...]) / jnp.maximum(l_ref[...], 1e-30)
+            p = p * (rows < len_ref[0, 0]).astype(p.dtype)
             colsum = jnp.sum(p, axis=0)                    # [Tk]
             cur = col_ref[0, pl.ds(col0, block_k)]
             col_ref[0, pl.ds(col0, block_k)] = cur + colsum
@@ -98,13 +104,21 @@ def _flash_prefill_kernel(q_ref, k_ref, v_ref, out_ref, acc_ref,
                                     "interpret"))
 def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array, group: int = 1,
                   block_q: int = 256, block_k: int = 256,
-                  interpret: bool = False):
-    """Returns (out [BH,N,d], acc [BH,N] f32). k/v have BH//group rows."""
+                  interpret: bool = False, lengths=None):
+    """Returns (out [BH,N,d], acc [BH,N] f32). k/v have BH//group rows.
+
+    `lengths` ([BH] int32, optional): true row counts for bucketed
+    (right-padded) prompts — pad rows are excluded from the column sums;
+    their output rows are garbage and must be sliced off by the caller."""
     bh, n, d = q.shape
     block_q = min(block_q, n)
     block_k = min(block_k, n)
     assert n % block_q == 0 and n % block_k == 0
     nqb, nkb = n // block_q, n // block_k
+    if lengths is None:
+        lengths = jnp.full((bh, 1), n, jnp.int32)
+    else:
+        lengths = lengths.astype(jnp.int32).reshape(bh, 1)
     kernel = functools.partial(
         _flash_prefill_kernel, scale=1.0 / (d ** 0.5),
         block_q=block_q, block_k=block_k, nkb=nkb, nqb=nqb, n=n)
@@ -118,6 +132,7 @@ def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array, group: int = 1,
                          lambda i, qb, kb: (i // g, jax.lax.rem(kb, nkb), 0)),
             pl.BlockSpec((1, block_k, d),
                          lambda i, qb, kb: (i // g, jax.lax.rem(kb, nkb), 0)),
+            pl.BlockSpec((1, 1), lambda i, qb, kb: (i, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, block_q, d), lambda i, qb, kb: (i, qb, 0)),
@@ -134,4 +149,4 @@ def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array, group: int = 1,
             pltpu.VMEM((1, n), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(q, k, v, lengths)

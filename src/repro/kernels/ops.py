@@ -90,9 +90,13 @@ def fused_decode(q, qq, qscale, mirror, mscale, kscale, vscale, valid,
 
 
 def flash_prefill(q, k, v, group: int = 1, block_q: int = 256,
-                  block_k: int = 256, backend: str = "auto"):
-    """Prefill flash attention + accumulated column scores."""
+                  block_k: int = 256, backend: str = "auto", lengths=None):
+    """Prefill flash attention + accumulated column scores.
+
+    `lengths` ([BH] int32, optional): true row counts when N is a shape
+    bucket and the tail is right-padding."""
     if backend == "xla":
-        return ref.flash_prefill_ref(q, k, v, group)
+        return ref.flash_prefill_ref(q, k, v, group, lengths=lengths)
     return _flash_pallas(q, k, v, group=group, block_q=block_q,
-                         block_k=block_k, interpret=not _on_tpu())
+                         block_k=block_k, interpret=not _on_tpu(),
+                         lengths=lengths)

@@ -26,8 +26,11 @@ def gather_attention_ref(q, k, v, valid):
     return jnp.einsum("bgk,bkd->bgd", p, v.astype(jnp.float32))
 
 
-def flash_prefill_ref(q, k, v, group=1):
-    """[BH,N,d], [BK,N,d], [BK,N,d] → (out [BH,N,d], acc [BH,N] f32)."""
+def flash_prefill_ref(q, k, v, group=1, lengths=None):
+    """[BH,N,d], [BK,N,d], [BK,N,d] → (out [BH,N,d], acc [BH,N] f32).
+
+    `lengths` ([BH] int32, optional): true row counts for right-padded
+    prompts — pad rows add no column mass (their output rows are garbage)."""
     bh, n, d = q.shape
     kx = jnp.repeat(k, group, axis=0)
     vx = jnp.repeat(v, group, axis=0)
@@ -37,6 +40,9 @@ def flash_prefill_ref(q, k, v, group=1):
     s = jnp.where(mask[None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bts,bsd->btd", p, vx.astype(jnp.float32))
+    if lengths is not None:
+        live = jnp.arange(n)[None, :] < lengths.astype(jnp.int32)[:, None]
+        p = p * live[:, :, None]
     return out.astype(q.dtype), jnp.sum(p, axis=1)
 
 

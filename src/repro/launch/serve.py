@@ -24,9 +24,10 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import functools
+import math
 import time
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -37,13 +38,57 @@ from repro.core import baselines
 from repro.models.transformer import Model, lane_insert, lane_select
 
 
+# ---------------------------------------------------------------------------
+# Prompt-length buckets — shape-stable prefill.
+#
+# `Model.prefill_one` compiles one XLA program per distinct prompt WIDTH.
+# Right-padding every prompt to a small doubling bucket grid and passing the
+# true length (masked all the way through attention, charge-domain
+# accumulation, and the static top-k) bounds the jit cache at len(buckets)
+# programs regardless of traffic — the serving-side analogue of the paper's
+# statically-shaped FeFET slot array. Two prompts padded to the same bucket
+# produce bit-identical logits/caches to a same-bucket full-batch prefill.
+# ---------------------------------------------------------------------------
+
+MIN_BUCKET = 16
+
+
+def bucket_length(t: int, buckets: Optional[Sequence[int]] = None) -> int:
+    """Smallest bucket >= t. Default grid: powers of two from MIN_BUCKET.
+    With an explicit grid, lengths beyond the largest bucket fall back to
+    the exact length (correct, but one extra compile per such length)."""
+    if buckets is None:
+        return max(MIN_BUCKET, 2 ** math.ceil(math.log2(max(t, 1))))
+    for b in buckets:
+        if b >= t:
+            return int(b)
+    return t
+
+
+def pad_to_bucket(prompt: np.ndarray,
+                  buckets: Optional[Sequence[int]] = None
+                  ) -> Tuple[np.ndarray, int]:
+    """Right-pad `prompt` to its bucket → (padded [bucket], true length)."""
+    prompt = np.asarray(prompt)
+    t = len(prompt)
+    b = bucket_length(t, buckets)
+    if b == t:
+        return prompt, t
+    out = np.zeros(b, prompt.dtype)
+    out[:t] = prompt
+    return out, t
+
+
 def greedy_generate(model: Model, params, batch, steps: int,
                     temperature: float = 0.0, key=None):
     """Prefill + `steps` decode steps. Returns [B, steps] generated ids.
 
     One Python dispatch per token — the reference loop (and the only one
     that supports sampling); production serving uses the scanned paths.
+    `key` defaults to PRNGKey(0) when sampling (temperature > 0).
     """
+    if temperature > 0 and key is None:
+        key = jax.random.PRNGKey(0)
     logits, state = jax.jit(model.prefill)(params, batch)
     decode = jax.jit(model.decode_step)
     toks = []
@@ -82,19 +127,23 @@ def decode_block_masked(model: Model, params, state, tok, active, rem,
 
     active: [B] bool lane-live mask; rem: [B] int32 remaining budget.
     Each step emits the carried token for active lanes, then advances; a
-    lane deactivates after emitting EOS (if eos >= 0) or exhausting its
-    budget, and from then on its state is frozen (lane_select drops its
-    writes) while the other lanes keep decoding. Returns
+    lane deactivates on EOS (if eos >= 0) or on exhausting its budget, and
+    from then on its state is frozen (lane_select drops its writes) while
+    the other lanes keep decoding. The EOS token itself is a stop signal,
+    NOT an output: it is never emitted (it would otherwise inflate token
+    counts and every tokens/s metric derived from them), while
+    budget-terminated lanes still emit exactly their `rem` tokens. Returns
     (state, tok, active, rem, toks [steps, B], emitted [steps, B]).
     """
     def body(carry, _):
         state, tok, active, rem = carry
         logits, new_state = model.decode_step(params, state, tok)
         state = lane_select(active, new_state, state)
-        emit = active & (rem > 0)      # robust to active lanes w/o budget
+        live = active & (rem > 0)      # robust to active lanes w/o budget
+        is_eos = (tok == eos) if eos >= 0 else jnp.zeros_like(active)
+        emit = live & ~is_eos
         rem = rem - emit.astype(rem.dtype)
-        active = emit if eos < 0 else emit & (tok != eos)
-        active = active & (rem > 0)
+        active = emit & (rem > 0)
         nxt = jnp.argmax(logits, -1).astype(tok.dtype)
         return (state, nxt, active, rem), (tok, emit)
 
@@ -150,6 +199,19 @@ def _prefill_one_fn(key):
     return jax.jit(_rebuild(*key).prefill_one)
 
 
+@functools.lru_cache(maxsize=32)
+def _prefill_chunk_fn(key):
+    # the workspace is rewritten every chunk — donate it in place
+    return jax.jit(_rebuild(*key).prefill_chunk,
+                   donate_argnums=_donate_argnums(1))
+
+
+@functools.lru_cache(maxsize=32)
+def _prefill_finalize_fn(key):
+    return jax.jit(_rebuild(*key).prefill_finalize,
+                   donate_argnums=_donate_argnums(1))
+
+
 def _jit_decode_block(model: Model, steps: int):
     return _block_fn(_model_key(model), steps)
 
@@ -202,18 +264,41 @@ class RequestStats:
     lane: int = -1
     tokens: List[int] = dataclasses.field(default_factory=list)
     t_arrival: float = 0.0     # run-relative seconds
-    t_admit: float = 0.0       # prefilled + spliced into a lane
+    t_admit: float = 0.0       # prefilled + spliced into a lane; under
+    #                            chunked admission this is when the LAST
+    #                            prefill slice finished, so ttft still
+    #                            covers the whole (time-sliced) prefill
     t_first: float = 0.0       # first generated token on the host
     t_done: float = 0.0
     occupancy: float = 0.0     # mean cache fill fraction at completion
+    bucket: int = 0            # padded prefill width (== prompt_len unbucketed)
+    prefill_chunks: int = 1    # dispatches the prefill was sliced into
 
     @property
     def latency(self) -> float:
         return self.t_done - self.t_arrival
 
     @property
+    def ttft(self) -> float:
+        """Time to first token (prefill-only requests: to prefill done)."""
+        return self.t_first - self.t_arrival
+
+    @property
     def decode_tps(self) -> float:
         return len(self.tokens) / max(self.t_done - self.t_admit, 1e-9)
+
+
+@dataclasses.dataclass
+class _ChunkedPrefill:
+    """Host-side progress of one in-flight time-sliced prefill."""
+    req: Request
+    lane: int
+    bucket: int
+    padded: np.ndarray
+    pstate: Any                # PrefillChunkState (device)
+    n_chunks: int
+    next_chunk: int = 0
+    x_last: Any = None         # final-stack hidden of the latest chunk
 
 
 class ServeLoop:
@@ -236,16 +321,33 @@ class ServeLoop:
     `block - 1` speculative steps after a lane hits EOS/budget (their
     outputs are masked out in-device).
 
-    Prompts are prefilled at their *exact* length, which keeps a
-    lane-inserted prefill bit-identical to a fresh full-batch prefill but
-    compiles one prefill program per distinct length (cached for the
-    process lifetime). Callers with highly diverse traffic should bucket
-    prompt lengths themselves before `submit()` if compile stalls matter.
+    **Bucketed prefill (default).** Prompts are right-padded to a small
+    doubling bucket grid and prefilled with a true-length mask, so the
+    prefill jit cache holds at most len(buckets) programs no matter how
+    many distinct lengths the traffic carries — mixed traffic no longer
+    stalls on per-length recompiles. A bucketed prefill is bit-identical
+    to a same-bucket full-batch prefill and matches an exact-length
+    prefill to float-association noise (~1e-7; see `Model.prefill`).
+    `buckets="auto"` uses powers of two from MIN_BUCKET; pass an explicit
+    sorted tuple to pin the grid, or `buckets=None` for legacy
+    exact-length prefills (one compile per distinct length).
+
+    **Chunked-prefill admission** (`chunk_prefill=C`, Sarathi-style): a
+    prompt whose bucket exceeds C is prefilled in C-token slices that
+    interleave with decode blocks — one slice, one decode block, … — so a
+    long arrival no longer head-of-line-blocks live decode lanes. The
+    sliced prefill streams per-layer K/V + accumulated column sums into a
+    fixed-size workspace and finalizes with the same one-shot static
+    pruning; `t_admit`/ttft cover the whole sliced prefill. Requires
+    `model.supports_chunked_prefill()` (plain attention stacks); others
+    fall back to whole-bucket admission.
     """
 
     def __init__(self, model: Model, params, lanes: int,
                  prompt_len: Optional[int] = None, max_new: int = 64,
-                 eos: int = -1, block: int = 1):
+                 eos: int = -1, block: int = 1,
+                 buckets: Union[str, Sequence[int], None] = "auto",
+                 chunk_prefill: int = 0):
         self.model = model
         self.params = params
         self.lanes = lanes
@@ -253,8 +355,17 @@ class ServeLoop:
         self.eos = eos
         self.prompt_len = prompt_len          # legacy hint; not enforced
         self.block = max(1, block)
+        self.buckets = (tuple(buckets)
+                        if isinstance(buckets, (list, tuple)) else buckets)
+        if self.buckets is not None and not model.supports_bucketed_prefill():
+            self.buckets = None               # documented fallback
+        self.chunk_prefill = max(0, chunk_prefill)
+        if self.chunk_prefill and not model.supports_chunked_prefill():
+            self.chunk_prefill = 0            # documented fallback
         self._prefill = _prefill_fn(_model_key(model))
         self._prefill_one = _prefill_one_fn(_model_key(model))
+        self._chunk = _prefill_chunk_fn(_model_key(model))
+        self._finalize = _prefill_finalize_fn(_model_key(model))
         self.state = None
         self.tok = None
         self.active = np.zeros(lanes, bool)
@@ -267,6 +378,8 @@ class ServeLoop:
         self._lane_rid: List[Optional[int]] = [None] * lanes
         self._next_rid = 0
         self._t0: Optional[float] = None
+        self._pending: Optional[_ChunkedPrefill] = None
+        self._prefill_shapes: set = set()     # (kind, width) seen this loop
 
     # -- time ----------------------------------------------------------------
 
@@ -301,11 +414,32 @@ class ServeLoop:
             self.state = self.model.init_decode_state(self.lanes)
             self.tok = jnp.zeros((self.lanes,), jnp.int32)
 
+    def _padded_prompt(self, req: Request) -> Tuple[np.ndarray, int]:
+        """(padded prompt, bucket width) under this loop's bucket policy."""
+        prompt = np.asarray(req.prompt)
+        if self.buckets is None:
+            return prompt, len(prompt)
+        grid = None if self.buckets == "auto" else self.buckets
+        padded, _ = pad_to_bucket(prompt, grid)
+        return padded, len(padded)
+
     def _admit_lane(self, lane: int, req: Request):
-        """Prefill one request and splice it into `lane` of the live state."""
+        """Prefill one request (whole-bucket) and splice it into `lane`."""
         self._ensure_state()
-        logits, fresh = self._prefill_one(self.params,
-                                          jnp.asarray(req.prompt))
+        padded, bucket = self._padded_prompt(req)
+        if bucket == len(req.prompt) and self.buckets is None:
+            self._prefill_shapes.add(("exact", bucket))
+            logits, fresh = self._prefill_one(self.params, jnp.asarray(padded))
+        else:
+            self._prefill_shapes.add(("bucket", bucket))
+            logits, fresh = self._prefill_one(
+                self.params, jnp.asarray(padded),
+                jnp.asarray(len(req.prompt), jnp.int32))
+        self._splice(lane, req, logits, fresh, bucket=bucket)
+
+    def _splice(self, lane: int, req: Request, logits, fresh,
+                bucket: int, prefill_chunks: int = 1):
+        """Insert a freshly prefilled batch-1 state into a free lane."""
         self.state, self.tok = _admit_fn()(self.state, self.tok, lane,
                                            fresh, logits)
         self.active[lane] = req.max_new > 0
@@ -315,21 +449,90 @@ class ServeLoop:
         st = self.stats[req.rid]
         st.lane = lane
         st.t_admit = self._now()
+        st.bucket = bucket
+        st.prefill_chunks = prefill_chunks
         if req.max_new <= 0:                   # prefill-only request
             st.t_first = st.t_admit            # ttft == prefill completion
             self._finish_lane(lane, self._now())
 
+    # -- chunked (time-sliced) admission -------------------------------------
+
+    def _needs_chunking(self, bucket: int) -> bool:
+        return 0 < self.chunk_prefill < bucket
+
+    def _start_chunked(self, lane: int, req: Request, padded: np.ndarray,
+                       bucket: int):
+        """Reserve `lane` and open a sliced prefill for a long prompt. Only
+        the chunks that contain real tokens are ever dispatched — trailing
+        all-pad chunks of the bucket contribute nothing by construction.
+
+        The workspace is rounded up to a multiple of the chunk size so
+        every dispatched slice is full-width: a ragged final slice would
+        silently compile one extra program per distinct ragged width (the
+        true-length mask makes the extra pad columns free)."""
+        self._ensure_state()
+        c = self.chunk_prefill
+        ws = math.ceil(bucket / c) * c
+        if ws != bucket:
+            ext = np.zeros(ws, padded.dtype)
+            ext[:len(padded)] = padded
+            padded = ext
+        self._pending = _ChunkedPrefill(
+            req=req, lane=lane, bucket=ws, padded=padded,
+            pstate=self.model.init_prefill_chunk_state(1, ws),
+            n_chunks=math.ceil(len(req.prompt) / c))
+        self._prefill_shapes.add(("chunk", c, ws))
+
+    def _advance_chunked(self) -> bool:
+        """Run ONE prefill slice of the in-flight chunked admission (the
+        caller interleaves decode blocks between slices). Returns True if
+        a slice was dispatched."""
+        p = self._pending
+        if p is None:
+            return False
+        c = self.chunk_prefill
+        ci = p.next_chunk
+        tok_c = jnp.asarray(p.padded[ci * c:(ci + 1) * c][None])
+        length = jnp.asarray([len(p.req.prompt)], jnp.int32)
+        p.x_last, p.pstate = self._chunk(self.params, p.pstate, tok_c,
+                                         jnp.asarray(ci * c, jnp.int32),
+                                         length)
+        p.next_chunk += 1
+        if p.next_chunk >= p.n_chunks:
+            logits, fresh = self._finalize(
+                self.params, p.pstate, p.x_last,
+                jnp.asarray((p.n_chunks - 1) * c, jnp.int32), length)
+            self._pending = None
+            self._splice(p.lane, p.req, logits[0], fresh, bucket=p.bucket,
+                         prefill_chunks=p.n_chunks)
+        return True
+
     def schedule(self) -> int:
-        """Admit queued, already-arrived requests into free lanes."""
+        """Admit queued, already-arrived requests into free lanes. Long
+        prompts (bucket > chunk_prefill) open a time-sliced prefill on a
+        reserved lane instead of blocking on a whole-prompt dispatch; at
+        most one sliced prefill is in flight at a time."""
         n = 0
         now = self._now()
-        while self.queue and not self.active.all():
+        while self.queue:
             if self.queue[0].arrival > now:
                 break
-            req = self.queue.popleft()
-            lane = int(np.flatnonzero(~self.active)[0])
-            self._admit_lane(lane, req)
-            n += 1
+            free = [lane for lane in np.flatnonzero(~self.active)
+                    if self._pending is None
+                    or lane != self._pending.lane]
+            if not free:
+                break
+            req = self.queue[0]
+            padded, bucket = self._padded_prompt(req)
+            if self._needs_chunking(bucket):
+                if self._pending is not None:
+                    break                      # one sliced prefill at a time
+                self.queue.popleft()
+                self._start_chunked(int(free[0]), req, padded, bucket)
+            else:
+                self.queue.popleft()
+                self._admit_lane(int(free[0]), req)
+                n += 1
         return n
 
     def admit(self, prompts: np.ndarray):
@@ -351,7 +554,7 @@ class ServeLoop:
             self._lane_rid[lane] = rid
             self.stats[rid] = RequestStats(
                 rid, prompts.shape[1], self.max_new, lane=lane,
-                t_arrival=now, t_admit=now)
+                t_arrival=now, t_admit=now, bucket=prompts.shape[1])
 
     # -- decode --------------------------------------------------------------
 
@@ -395,6 +598,11 @@ class ServeLoop:
         if rid is None:
             return
         st = self.stats[rid]
+        if st.t_first < st.t_admit:
+            # nothing was ever emitted (e.g. the very first generated token
+            # was EOS, which is a stop signal, not an output) — anchor ttft
+            # at completion so it can never go negative
+            st.t_first = now
         st.tokens = list(self.outputs[lane])
         st.t_done = now
         st.occupancy = self._lane_occupancy(lane)
@@ -412,31 +620,52 @@ class ServeLoop:
     # -- driver ---------------------------------------------------------------
 
     def run(self) -> List[RequestStats]:
-        """Drive until the queue is drained and every lane is idle."""
+        """Drive until the queue is drained and every lane is idle. Each
+        iteration interleaves (at most) one prefill slice with one decode
+        block, so live lanes keep emitting tokens while a long prompt
+        prefills."""
         if self._t0 is None:
             self._t0 = time.monotonic()
-        while self.queue or self.active.any():
+        while self.queue or self.active.any() or self._pending is not None:
             self.schedule()
-            if not self.active.any():
+            stepped = self._advance_chunked()
+            if self.active.any():
+                self.step_block()
+            elif not stepped:
                 if not self.queue:     # e.g. a trailing prefill-only request
                     continue
                 wait = self.queue[0].arrival - self._now()
                 if wait > 0:
                     time.sleep(min(wait, 0.05))
-                continue
-            self.step_block()
         return self.completed
+
+    def prefill_programs(self) -> Dict[str, int]:
+        """Compile accounting for the prefill path.
+
+        `loop_shapes`: distinct prefill shapes THIS loop dispatched (what a
+        bounded bucket grid guarantees). `jit_cache`: entries in the
+        process-wide jit caches backing this model's prefill/chunk/finalize
+        entry points (shared across ServeLoops of functionally identical
+        models — the actual number of compiled XLA programs)."""
+        jit_cache = sum(fn._cache_size()
+                        for fn in (self._prefill_one, self._chunk,
+                                   self._finalize)
+                        if hasattr(fn, "_cache_size"))
+        return {"loop_shapes": len(self._prefill_shapes),
+                "jit_cache": int(jit_cache)}
 
     def aggregate(self) -> Dict[str, float]:
         """Serving metrics over completed requests."""
         if not self.completed:
             return {"requests": 0.0, "tokens": 0.0, "wall_s": 0.0,
                     "tokens_per_s": 0.0, "mean_latency_s": 0.0,
-                    "mean_occupancy": 0.0}
+                    "mean_occupancy": 0.0, "p50_ttft_s": 0.0,
+                    "p99_ttft_s": 0.0, "prefill_programs": 0.0}
         toks = sum(len(s.tokens) for s in self.completed)
         t_end = max(s.t_done for s in self.completed)
         t_begin = min(s.t_arrival for s in self.completed)
         wall = max(t_end - t_begin, 1e-9)
+        ttfts = [s.ttft for s in self.completed]
         return {
             "requests": float(len(self.completed)),
             "tokens": float(toks),
@@ -446,6 +675,9 @@ class ServeLoop:
                                              for s in self.completed])),
             "mean_occupancy": float(np.mean([s.occupancy
                                              for s in self.completed])),
+            "p50_ttft_s": float(np.percentile(ttfts, 50)),
+            "p99_ttft_s": float(np.percentile(ttfts, 99)),
+            "prefill_programs": float(len(self._prefill_shapes)),
         }
 
 
@@ -465,6 +697,12 @@ def main(argv=None):
     ap.add_argument("--serve", action="store_true",
                     help="continuous-batching demo: 2x batch staggered "
                          "variable-length requests through ServeLoop")
+    ap.add_argument("--chunk-prefill", type=int, default=0,
+                    help="slice prefills into this many tokens per "
+                         "dispatch, interleaved with decode (--serve only)")
+    ap.add_argument("--no-buckets", action="store_true",
+                    help="legacy exact-length prefills (one compile per "
+                         "distinct prompt length)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -487,8 +725,11 @@ def main(argv=None):
 
     if args.serve:
         loop = ServeLoop(model, params, lanes=args.batch,
-                         max_new=args.new_tokens, block=8)
-        lens = (args.prompt_len, max(8, args.prompt_len // 2))
+                         max_new=args.new_tokens, block=8,
+                         buckets=None if args.no_buckets else "auto",
+                         chunk_prefill=args.chunk_prefill)
+        lens = (args.prompt_len, max(8, args.prompt_len // 2),
+                max(8, args.prompt_len - 7), max(8, args.prompt_len // 3))
         for i in range(2 * args.batch):
             loop.submit(rng.integers(0, cfg.vocab_size, lens[i % len(lens)]),
                         max_new=args.new_tokens // (1 + i % 2))
@@ -498,11 +739,14 @@ def main(argv=None):
         agg = loop.aggregate()
         for s in stats:
             print(f"  req {s.rid}: lane={s.lane} prompt={s.prompt_len} "
+                  f"bucket={s.bucket} chunks={s.prefill_chunks} "
                   f"new={len(s.tokens)} latency={s.latency:.2f}s "
-                  f"occ={s.occupancy:.2f}")
+                  f"ttft={s.ttft:.2f}s occ={s.occupancy:.2f}")
         print(f"arch={cfg.name} policy={args.policy} fused={args.fused} "
               f"served {len(stats)} reqs on {args.batch} lanes in {dt:.2f}s "
-              f"({agg['tokens_per_s']:.1f} tok/s)")
+              f"({agg['tokens_per_s']:.1f} tok/s, "
+              f"p99_ttft={agg['p99_ttft_s']:.2f}s, "
+              f"{loop.prefill_programs()['loop_shapes']} prefill shapes)")
         return
 
     prompts = rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len))

@@ -7,7 +7,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, PruneConfig
-from repro.core.attention import chunked_causal_attention, decode_attention
+from repro.core.attention import (chunked_causal_attention, decode_attention,
+                                  prefill_chunk_attend)
 from repro.core.cache import KVCache
 from repro.core.pruning import prefill_and_prune
 from repro.models.layers import dense_init, rope
@@ -68,16 +69,45 @@ def attention_train(p, x, cfg: ModelConfig, positions,
 
 
 def attention_prefill(p, x, cfg: ModelConfig, positions, prune: PruneConfig,
-                      cache: KVCache, chunk: int = 0
+                      cache: KVCache, chunk: int = 0, length=None
                       ) -> Tuple[jax.Array, KVCache]:
-    """Prompt pass: dense causal attention + one-shot static pruning."""
+    """Prompt pass: dense causal attention + one-shot static pruning.
+
+    `length` ([B] int32, optional): true per-lane lengths for bucketed
+    (right-padded) prompts — threaded through to the masked attention and
+    the static pruning."""
     b, t, _ = x.shape
     chunk = chunk or cfg.attn_chunk
     q, k, v = _project_qkv(p, x, cfg, positions)
     cache, out = prefill_and_prune(cache, q, k, v, prune,
-                                   chunk=min(chunk, t))
+                                   chunk=min(chunk, t), length=length)
     out = out.transpose(0, 2, 1, 3).reshape(b, t, cfg.q_dim).astype(x.dtype)
     return out @ p["wo"], cache
+
+
+def attention_prefill_chunk(p, x, cfg: ModelConfig, positions,
+                            prune: PruneConfig, k_buf: jax.Array,
+                            v_buf: jax.Array, acc: jax.Array, row0,
+                            length):
+    """One chunk of a time-sliced (Sarathi-style chunked) prefill.
+
+    x: [B,C,d] hidden for absolute rows [row0, row0+C); k_buf/v_buf:
+    [B,Hk,N,dh] streamed prompt K/V (rows < row0 already written); acc:
+    [B,Hk,N] running accumulated column sums. Projects the chunk's Q/K/V,
+    appends K/V into the buffers at row0, and attends causally over the
+    buffer — bit-identical to the same rows of the one-shot
+    `attention_prefill` over the full bucket. Returns
+    (y [B,C,d], k_buf, v_buf, acc)."""
+    b, c, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    k_buf = jax.lax.dynamic_update_slice_in_dim(
+        k_buf, k.astype(k_buf.dtype), row0, axis=2)
+    v_buf = jax.lax.dynamic_update_slice_in_dim(
+        v_buf, v.astype(v_buf.dtype), row0, axis=2)
+    out, col = prefill_chunk_attend(q, k_buf, v_buf, row0, length,
+                                    obs_window=prune.prefill_obs_window)
+    out = out.transpose(0, 2, 1, 3).reshape(b, c, cfg.q_dim).astype(x.dtype)
+    return out @ p["wo"], k_buf, v_buf, acc + col
 
 
 def attention_decode(p, x, cfg: ModelConfig, cache: KVCache,

@@ -81,7 +81,7 @@ def _latents(p, x, cfg: ModelConfig, positions):
 
 
 def _mla_attend(p, x, cfg: ModelConfig, positions, chunk: int,
-                obs_window: int = 0):
+                obs_window: int = 0, length=None):
     """Absorbed-form chunked causal MLA.
 
     Returns (out [B,T,d], u [B,T,latent], acc [B,1,T]). Never materialises
@@ -104,7 +104,7 @@ def _mla_attend(p, x, cfg: ModelConfig, positions, chunk: int,
     ctx, acc = chunked_causal_attention(
         q_full.astype(jnp.float32), u[:, None],             # Hk = 1
         u[:, None, :, :m.kv_lora_rank], chunk=min(chunk, t), scale=scale,
-        obs_window=obs_window)                              # ctx [B,H,T,kvr]
+        obs_window=obs_window, length=length)               # ctx [B,H,T,kvr]
     out = jnp.einsum("bhtk,khv->bthv", ctx, w_uv.astype(jnp.float32))
     out = out.reshape(b, t, h * m.v_dim).astype(x.dtype)
     return out @ p["wo"], u, acc
@@ -117,11 +117,16 @@ def mla_train(p, x, cfg: ModelConfig, positions, chunk: int = 0):
 
 
 def mla_prefill(p, x, cfg: ModelConfig, positions, prune: PruneConfig,
-                cache: KVCache, chunk: int = 0):
-    """Prefill with one-shot static pruning of the LATENT cache."""
+                cache: KVCache, chunk: int = 0, length=None):
+    """Prefill with one-shot static pruning of the LATENT cache.
+
+    `length` ([B] int32, optional): true per-lane lengths for bucketed
+    (right-padded) prompts."""
     out, u, acc = _mla_attend(p, x, cfg, positions, chunk or cfg.attn_chunk,
-                              obs_window=prune.prefill_obs_window)
-    cache = prefill_fill(cache, u[:, None, :, :], None, acc, prune)
+                              obs_window=prune.prefill_obs_window,
+                              length=length)
+    cache = prefill_fill(cache, u[:, None, :, :], None, acc, prune,
+                         length=length)
     return out, cache
 
 

@@ -25,6 +25,7 @@ from repro.core import cache as kvcache
 from repro.core.cache import KVCache, init_cache
 from repro.models import layers as L
 from repro.models.attention_layer import (attention_decode, attention_prefill,
+                                          attention_prefill_chunk,
                                           attention_train, cross_attention,
                                           encode_cross_kv, init_attention)
 from repro.models.mla import init_mla, mla_decode, mla_prefill, mla_train
@@ -38,6 +39,20 @@ class DecodeState(NamedTuple):
     kv: Optional[KVCache]            # stacked [L_attn, ...]
     ssm: Optional[SSMState]          # stacked [L_ssm, ...]
     cross: Optional[Tuple[jax.Array, jax.Array]]  # [L_dec, B, Hk, S, dh]
+
+
+class PrefillChunkState(NamedTuple):
+    """Streaming workspace for a time-sliced (chunked) prefill.
+
+    Fixed-size per-layer prompt K/V buffers plus the running accumulated
+    column sums, sized to the prompt's shape bucket. Chunks write rows
+    [row0, row0+C) and attend causally over the prefix; after the last
+    chunk `Model.prefill_finalize` runs the one-shot static pruning over
+    the full buffers — numerically identical to a whole-prompt prefill,
+    but dispatchable in slices interleaved with decode blocks."""
+    k: jax.Array                     # [L_attn, B, Hk, N_bucket, dh]
+    v: jax.Array                     # [L_attn, B, Hk, N_bucket, dv]
+    acc: jax.Array                   # [L_attn, B, Hk, N_bucket] f32
 
 
 # ---------------------------------------------------------------------------
@@ -162,7 +177,7 @@ def _block_train(p, x, cfg: ModelConfig, positions, kind: str,
 
 
 def _block_prefill(p, x, cfg, positions, prune, cache, kind: str,
-                   cross_kv=None):
+                   cross_kv=None, length=None):
     """Residual block prompt pass with cache fill. Returns (x, cache)."""
     if kind == "ssm":
         h = L.apply_norm(p["norm"], x, cfg.norm)
@@ -170,10 +185,11 @@ def _block_prefill(p, x, cfg, positions, prune, cache, kind: str,
         return x + y, st
     h = L.apply_norm(p["ln1"], x, cfg.norm)
     if kind.startswith("mla"):
-        a, cache = mla_prefill(p["attn"], h, cfg, positions, prune, cache)
+        a, cache = mla_prefill(p["attn"], h, cfg, positions, prune, cache,
+                               length=length)
     else:
         a, cache = attention_prefill(p["attn"], h, cfg, positions, prune,
-                                     cache)
+                                     cache, length=length)
     x = x + a
     if kind == "encdec_dec":
         h = L.apply_norm(p["ln_x"], x, cfg.norm)
@@ -184,6 +200,23 @@ def _block_prefill(p, x, cfg, positions, prune, cache, kind: str,
     else:
         y = L.apply_mlp(p["mlp"], h, cfg.act)
     return x + y, cache
+
+
+def _block_prefill_chunk(p, x, cfg, prune, bufs: PrefillChunkState,
+                         kind: str, positions, row0, length):
+    """Residual block over one prefill chunk, streaming K/V into `bufs`.
+    x: [B,C,d]. Returns (x, bufs). Attention-only kinds (dense/moe)."""
+    h = L.apply_norm(p["ln1"], x, cfg.norm)
+    a, k_buf, v_buf, acc = attention_prefill_chunk(
+        p["attn"], h, cfg, positions, prune, bufs.k, bufs.v, bufs.acc,
+        row0, length)
+    x = x + a
+    h = L.apply_norm(p["ln2"], x, cfg.norm)
+    if kind.endswith("moe"):
+        y, _ = _moe(p["moe"], h, cfg)
+    else:
+        y = L.apply_mlp(p["mlp"], h, cfg.act)
+    return x + y, PrefillChunkState(k_buf, v_buf, acc)
 
 
 def _block_decode(p, x, cfg, prune, cache, kind: str, cross_kv=None):
@@ -504,17 +537,36 @@ class Model:
 
     def prefill(self, params, batch) -> Tuple[jax.Array, DecodeState]:
         """Prompt pass with one-shot static pruning.
-        Returns (last-position logits [B,V], DecodeState)."""
+        Returns (last-position logits [B,V], DecodeState).
+
+        `batch["length"]` ([B] int32, optional) marks true per-lane prompt
+        lengths when `tokens` is right-padded to a shape-stable bucket:
+        pad positions neither attend, accumulate charge-domain mass, nor
+        enter the static top-k, the cache records the real length, and the
+        returned logits come from the last *valid* position of each lane.
+        Only attention families support it (SSM/hybrid recurrent state and
+        the enc-dec path would absorb pad tokens)."""
         cfg = self.cfg
         prune = self.prune
         tokens = batch["tokens"]
+        length = batch.get("length")
         b, t = tokens.shape
 
         if cfg.family == "encdec":
+            if length is not None:
+                raise ValueError("bucketed prefill: encdec unsupported")
             return self._prefill_encdec(params, batch)
+        if length is not None and cfg.family in ("ssm", "hybrid"):
+            raise ValueError(
+                f"bucketed prefill: {cfg.family} carries recurrent state "
+                "that right-padded tokens would pollute")
+        if length is not None:
+            length = jnp.asarray(length, jnp.int32)
 
         x = self._embed_tokens(params, tokens)
         x, n_front = self._prepend_frontend(params, batch, x)
+        # frontend positions sit at the FRONT and are always valid
+        eff_len = None if length is None else length + n_front
         pos = jnp.arange(x.shape[1])[None]
         if cfg.pos == "sinusoidal":
             x = x + L.sinusoidal(pos, cfg.d_model).astype(x.dtype)
@@ -539,7 +591,8 @@ class Model:
                 kv_seg = jax.tree.map(lambda a: a[li:li + n], state.kv)
                 def body(x, inp, kind=kind):
                     pl, c = inp
-                    y, c2 = _block_prefill(pl, x, cfg, pos, prune, c, kind)
+                    y, c2 = _block_prefill(pl, x, cfg, pos, prune, c, kind,
+                                           length=eff_len)
                     return y, c2
                 x, kv_out = xscan(body, x,
                                          (params[f"seg{i}_{kind}"], kv_seg))
@@ -547,18 +600,108 @@ class Model:
                 li += n
             kv = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_caches)
             state = state._replace(kv=kv)
-        logits = self._logits(params, x[:, -1:])[:, 0]
+        if length is None:
+            x_last = x[:, -1:]
+        else:  # last *valid* position per lane, not the bucket's last pad
+            idx = (length + n_front - 1)[:, None, None]
+            x_last = jnp.take_along_axis(x, idx, axis=1)
+        logits = self._logits(params, x_last)[:, 0]
         return logits, state
 
-    def prefill_one(self, params, tokens) -> Tuple[jax.Array, DecodeState]:
+    def prefill_one(self, params, tokens,
+                    length=None) -> Tuple[jax.Array, DecodeState]:
         """Prefill a single request. tokens: [t] (any t ≤ max_seq_len) →
         (logits [V], batch-1 DecodeState) ready for `lane_insert` into a
-        live batched state. Each distinct prompt length traces/compiles its
-        own program under jit — serving engines bucket lengths to bound
-        that."""
+        live batched state.
+
+        Each distinct `tokens` width traces/compiles its own program under
+        jit. Serving engines bound that by right-padding the prompt to a
+        small bucket set and passing the true `length` (scalar, may be
+        traced): compile count is then ≤ len(buckets) regardless of
+        traffic, and the masked program produces bit-identical logits and
+        cache to a same-bucket full-batch prefill (`ServeLoop` does this
+        by default; see `launch/serve.py:pad_to_bucket`)."""
         tokens = jnp.asarray(tokens)
-        logits, state = self.prefill(params, {"tokens": tokens[None]})
+        batch = {"tokens": tokens[None]}
+        if length is not None:
+            batch["length"] = jnp.asarray(length, jnp.int32).reshape(1)
+        logits, state = self.prefill(params, batch)
         return logits[0], state
+
+    def supports_bucketed_prefill(self) -> bool:
+        """True-length-masked (right-padded) prefill needs the prompt pass
+        to be attention-only: SSM/hybrid recurrence and the enc-dec path
+        would absorb pad tokens into their state. Serving engines fall
+        back to exact-length prefills for these families."""
+        return self.cfg.family not in ("ssm", "hybrid", "encdec")
+
+    # -- chunked (time-sliced) prefill ---------------------------------------
+
+    def supports_chunked_prefill(self) -> bool:
+        """Chunked admission covers the plain attention stacks; recurrent
+        (ssm/hybrid), enc-dec, MLA-latent, and frontend models fall back
+        to whole-prompt bucketed prefill."""
+        cfg = self.cfg
+        return (cfg.family in ("dense", "moe") and cfg.mla is None
+                and cfg.frontend == "none")
+
+    def init_prefill_chunk_state(self, batch_size: int,
+                                 bucket: int) -> PrefillChunkState:
+        """Empty streaming workspace for a prompt padded to `bucket`."""
+        cfg = self.cfg
+        assert self.supports_chunked_prefill(), cfg.family
+        dt = _dtype(cfg.compute_dtype)
+        n_attn = self.attn_layer_count()
+        shape = (n_attn, batch_size, cfg.n_kv_heads, bucket, cfg.head_dim)
+        return PrefillChunkState(k=jnp.zeros(shape, dt),
+                                 v=jnp.zeros(shape, dt),
+                                 acc=jnp.zeros(shape[:4], jnp.float32))
+
+    def prefill_chunk(self, params, pstate: PrefillChunkState, tokens_c,
+                      row0, length) -> Tuple[jax.Array, PrefillChunkState]:
+        """One Sarathi-style prefill slice: run the whole layer stack over
+        prompt rows [row0, row0+C), streaming each layer's K/V into the
+        workspace. tokens_c: [B,C]; row0: scalar int32 (may be traced —
+        one compiled program per (C, bucket) pair, NOT per offset);
+        length: [B] true prompt lengths. Returns (final-stack hidden
+        [B,C,d] for this chunk, updated workspace)."""
+        cfg, prune = self.cfg, self.prune
+        b, c = tokens_c.shape
+        length = jnp.asarray(length, jnp.int32)
+        x = self._embed_tokens(params, tokens_c)
+        pos = row0 + jnp.arange(c)[None]
+        if cfg.pos == "sinusoidal":
+            x = x + L.sinusoidal(pos, cfg.d_model).astype(x.dtype)
+        (kind, _), = [s for s in self._segments() if s[1] > 0]
+
+        def body(x, inp):
+            pl, bufs = inp
+            return _block_prefill_chunk(pl, x, cfg, prune, bufs, kind,
+                                        pos, row0, length)
+
+        x, new_bufs = xscan(body, x, (params[f"seg0_{kind}"], pstate))
+        return x, new_bufs
+
+    def prefill_finalize(self, params, pstate: PrefillChunkState, x_last,
+                         row0, length) -> Tuple[jax.Array, DecodeState]:
+        """Finish a chunked prefill: one-shot static pruning over the
+        streamed buffers + last-valid logits. x_last: the final processed
+        chunk's hidden [B,C,d] (must contain position length-1); row0 its
+        absolute offset. Returns (logits [B,V], DecodeState) — identical
+        to what a whole-prompt bucketed `prefill` would have produced."""
+        prune = self.prune
+        length = jnp.asarray(length, jnp.int32)
+        state = self.init_decode_state(x_last.shape[0])
+
+        def fill(cache_l, k_l, v_l, acc_l):
+            return kvcache.prefill_fill(cache_l, k_l, v_l, acc_l, prune,
+                                        length=length)
+
+        kv = jax.vmap(fill)(state.kv, pstate.k, pstate.v, pstate.acc)
+        idx = (length - 1 - row0)[:, None, None]
+        x_sel = jnp.take_along_axis(x_last, idx, axis=1)
+        logits = self._logits(params, x_sel)[:, 0]
+        return logits, state._replace(kv=kv)
 
     def _prefill_hybrid(self, params, x, pos, state: DecodeState):
         cfg = self.cfg

@@ -122,6 +122,69 @@ def test_threshold_race_selects_about_k():
         assert (np.abs(counts - k) <= max(3, k // 4)).all(), (k, counts)
 
 
+def test_threshold_race_with_selection_bias_stays_near_k():
+    """Regression: racing the ±1e30-biased scores directly degenerates —
+    8 bisections over [-1e30, 1e30] leave ~1e27 resolution, so every
+    finite score falls in one bucket and far more than k slots survive.
+    Racing finite evictable scores only (protected unioned in afterwards)
+    keeps the survivor count in [k, ~2k] with sinks/recents present."""
+    from repro.core.topk import apply_selection_bias
+    s = 128
+    scores = jax.random.normal(jax.random.PRNGKey(5), (B, Hk, s))
+    protected = jnp.zeros((B, Hk, s), bool).at[:, :, :6].set(True)
+    invalid = jnp.zeros((B, Hk, s), bool).at[:, :, -16:].set(True)
+    protected = protected & ~invalid
+    for k in (16, 32):
+        # the buggy formulation: race over the sentinel-biased scores —
+        # the threshold can't resolve below ~1e27, so ~half of ALL finite
+        # scores survive regardless of k
+        biased = apply_selection_bias(scores, protected, invalid)
+        degenerate = threshold_race(biased, k, iters=8)
+        assert (np.asarray(degenerate.sum(-1)) > 1.5 * k).all()
+        # the fixed formulation (what decode_attention now does)
+        evictable = ~protected & ~invalid
+        k_dyn = jnp.maximum(k - protected.sum(-1, keepdims=True), 1)
+        mask = threshold_race(scores, k_dyn, iters=8,
+                              eligible=evictable) | protected
+        counts = np.asarray(mask.sum(-1))
+        assert (counts >= k - 2).all(), (k, counts)
+        assert (counts <= 2 * k).all(), (k, counts)
+        # protected always survive, invalid never do
+        assert np.asarray(mask & invalid).sum() == 0
+        assert bool(np.asarray((mask & protected) == protected).all())
+
+
+def test_threshold_mode_decode_survivor_count():
+    """End-to-end: the threshold select_mode keeps ~select_k slots once
+    the cache is full (it previously kept nearly everything)."""
+    prune = PruneConfig(policy="unicaim", heavy_budget=56, reserve=8,
+                        select_k=16, select_mode="threshold",
+                        sink_tokens=2, recent_window=4)
+    from repro.core import quant, scoring
+    from repro.core.cache import protected_mask
+    cache = init_cache(B, Hk, d, 64, prune, jnp.float32)
+    from repro.core.attention import decode_attention
+    for i in range(80):
+        ks = jax.random.split(jax.random.PRNGKey(i), 3)
+        cache, _ = decode_attention(
+            cache, jax.random.normal(ks[0], (B, Hq, d)),
+            jax.random.normal(ks[1], (B, Hk, d)),
+            jax.random.normal(ks[2], (B, Hk, d)), prune)
+    q = jax.random.normal(jax.random.PRNGKey(123), (B, Hq, d))
+    qq, qs = quant.quantize_query(q, prune.query_bits)
+    grouped = gqa_group_scores(
+        scoring.approx_scores(qq, qs, cache.kq, cache.kscale, cache.valid),
+        Hk)
+    prot = protected_mask(cache, prune)
+    evictable = cache.valid & ~prot
+    k_dyn = jnp.maximum(prune.select_k - prot.sum(-1, keepdims=True), 1)
+    mask = threshold_race(grouped, k_dyn, prune.threshold_iters,
+                          eligible=evictable) | prot
+    counts = np.asarray(mask.sum(-1))
+    assert (counts >= prune.select_k - 4).all(), counts
+    assert (counts <= 2 * prune.select_k).all(), counts
+
+
 def test_threshold_mode_decode_runs():
     prune = PruneConfig(policy="unicaim", heavy_budget=24, reserve=8,
                         select_k=8, select_mode="threshold",
@@ -134,6 +197,83 @@ def test_threshold_mode_decode_runs():
             jax.random.normal(ks[1], (B, Hk, d)),
             jax.random.normal(ks[2], (B, Hk, d)), prune)
         assert not np.isnan(np.asarray(out)).any()
+
+
+@pytest.mark.parametrize("chunk", [16, 96])
+def test_chunked_attention_length_mask(chunk):
+    """Right-padded inputs with a true-length mask reproduce exact-length
+    attention: real-row outputs match, pad rows/cols add zero column mass,
+    and the observation window anchors at the true length."""
+    t, bucket = 40, 96
+    q, k, v = _qkv(4, t=bucket)
+    out_e, acc_e = chunked_causal_attention(q[:, :, :t], k[:, :, :t],
+                                            v[:, :, :t], chunk=chunk)
+    length = jnp.array([t, t])
+    out_p, acc_p = chunked_causal_attention(q, k, v, chunk=chunk,
+                                            length=length)
+    np.testing.assert_allclose(np.asarray(out_p[:, :, :t]),
+                               np.asarray(out_e), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(acc_p[:, :, :t]),
+                               np.asarray(acc_e), atol=1e-5)
+    assert np.abs(np.asarray(acc_p[:, :, t:])).max() == 0.0
+    # per-lane lengths differ: each lane matches its own exact reference
+    length2 = jnp.array([t, 24])
+    _, acc_m = chunked_causal_attention(q, k, v, chunk=chunk,
+                                        length=length2)
+    _, acc_24 = chunked_causal_attention(q[1:, :, :24], k[1:, :, :24],
+                                         v[1:, :, :24], chunk=chunk)
+    np.testing.assert_allclose(np.asarray(acc_m[1, :, :24]),
+                               np.asarray(acc_24[0]), atol=1e-5)
+    assert np.abs(np.asarray(acc_m[1, :, 24:])).max() == 0.0
+    # obs_window anchors at the true length, not the bucket
+    _, acc_w = chunked_causal_attention(q, k, v, chunk=chunk, obs_window=8,
+                                        length=length)
+    _, acc_we = chunked_causal_attention(q[:, :, :t], k[:, :, :t],
+                                         v[:, :, :t], chunk=chunk,
+                                         obs_window=8)
+    np.testing.assert_allclose(np.asarray(acc_w[:, :, :t]),
+                               np.asarray(acc_we), atol=1e-5)
+
+
+def test_prefill_fill_bucketed_matches_exact():
+    """prefill_fill with a true-length mask: padded tokens never win the
+    static top-k, inert pad slots are all-zero and invalid, and
+    pos/fill/step reflect the real length, not the bucket."""
+    import dataclasses as dc
+    from repro.core.cache import prefill_fill
+    prune = baselines.unicaim(heavy=24, reserve=8, select_k=8,
+                              sink_tokens=2, recent_window=4)
+    t, bucket = 20, 32                 # t < heavy_budget → inert slots
+    _, k, v = _qkv(6, t=bucket)
+    acc = jax.random.uniform(jax.random.PRNGKey(7), (B, Hk, bucket))
+    acc = acc.at[:, :, t:].set(0.0)    # masked prefill guarantees this
+    c_b = init_cache(B, Hk, d, prune.slots, prune, jnp.float32)
+    filled_b = prefill_fill(c_b, k, v, acc, prune,
+                            length=jnp.full((B,), t, jnp.int32))
+    c_e = init_cache(B, Hk, d, prune.slots, prune, jnp.float32)
+    filled_e = prefill_fill(c_e, k[:, :, :t], v[:, :, :t], acc[:, :, :t],
+                            prune)
+    for name, a, b in zip(filled_b._fields, filled_b, filled_e):
+        if a is None:
+            continue
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+    assert (np.asarray(filled_b.fill) == t).all()
+    assert (np.asarray(filled_b.step) == t).all()
+    assert (np.asarray(filled_b.pos) < t).all()
+    # int8 storage mirrors stay in lockstep too
+    prune8 = dc.replace(prune, kv_dtype="int8")
+    c8_b = init_cache(B, Hk, d, prune8.slots, prune8)
+    f8_b = prefill_fill(c8_b, k, v, acc, prune8,
+                        length=jnp.full((B,), t, jnp.int32))
+    c8_e = init_cache(B, Hk, d, prune8.slots, prune8)
+    f8_e = prefill_fill(c8_e, k[:, :, :t], v[:, :, :t], acc[:, :, :t],
+                        prune8)
+    for name, a, b in zip(f8_b._fields, f8_b, f8_e):
+        if a is None:
+            continue
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
 
 
 def test_prefill_and_prune_output_matches_dense():

@@ -75,6 +75,38 @@ def test_flash_prefill_sweep(b, hq, hk, n, d, bq, bk):
                                np.full((b * hq,), float(n)), rtol=1e-4)
 
 
+def test_flash_prefill_lengths_mask():
+    """Bucketed prefill in-kernel: pad rows beyond the per-row true length
+    add no column mass; real rows/cols match the exact-length kernel."""
+    b, hq, hk, n, d, t = 1, 4, 2, 128, 32, 80
+    g = hq // hk
+    ks = jax.random.split(jax.random.PRNGKey(42), 3)
+    q = jax.random.normal(ks[0], (b * hq, n, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b * hk, n, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b * hk, n, d), jnp.float32)
+    lengths = jnp.full((b * hq,), t, jnp.int32)
+    out, acc = flash_prefill(q, k, v, group=g, block_q=32, block_k=32,
+                             interpret=True, lengths=lengths)
+    ref_out, ref_acc = ref.flash_prefill_ref(q, k, v, group=g,
+                                             lengths=lengths)
+    np.testing.assert_allclose(np.asarray(out[:, :t]),
+                               np.asarray(ref_out[:, :t]), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(ref_acc),
+                               atol=2e-4)
+    # pad columns receive no probability mass from real rows
+    assert np.abs(np.asarray(acc[:, t:])).max() == 0.0
+    # exact-length run over the true prefix agrees on real columns
+    out_e, acc_e = flash_prefill(q[:, :t], k[:, :t], v[:, :t], group=g,
+                                 block_q=16, block_k=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(out[:, :t]), np.asarray(out_e),
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(acc[:, :t]), np.asarray(acc_e),
+                               atol=2e-4)
+    # column sums of a causal softmax over t live rows total t per (b,h)
+    np.testing.assert_allclose(np.asarray(acc.sum(-1)),
+                               np.full((b * hq,), float(t)), rtol=1e-4)
+
+
 def test_flash_prefill_bf16():
     b, hq, hk, n, d = 1, 2, 1, 64, 32
     ks = jax.random.split(jax.random.PRNGKey(0), 3)

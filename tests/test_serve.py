@@ -152,19 +152,43 @@ def test_variable_length_lane_isolation(setup):
 
 def test_eos_mid_block_in_device_termination(setup):
     """EOS landing mid-block truncates the lane's output in-device; tokens
-    up to and including EOS match the eos-disabled reference."""
+    strictly BEFORE EOS match the eos-disabled reference — the EOS token
+    is a stop signal, not an output, so it never counts toward tokens/s."""
     cfg, model, params = setup
     prompt = _prompt(cfg, 24, seed=3)
     ref_loop = ServeLoop(model, params, lanes=2, eos=-1, block=1)
     rid = ref_loop.submit(prompt, max_new=8)
     ref = {s.rid: s.tokens for s in ref_loop.run()}[rid]
     eos = ref[3]                      # EOS fires at step 3 of an 8-block
-    expected = ref[:ref.index(eos) + 1]
+    expected = ref[:ref.index(eos)]
     loop = ServeLoop(model, params, lanes=2, eos=eos, block=8)
     rid2 = loop.submit(prompt, max_new=8)
     out = {s.rid: s.tokens for s in loop.run()}[rid2]
     assert out == expected
-    assert out[-1] == eos
+    assert eos not in out
+
+
+def test_eos_vs_budget_token_counts(setup):
+    """EOS-terminated requests report only pre-EOS tokens (no EOS
+    inflation of decode_tps / tokens_per_s); budget-terminated requests
+    still emit exactly max_new."""
+    cfg, model, params = setup
+    prompt = _prompt(cfg, 24, seed=3)
+    ref_loop = ServeLoop(model, params, lanes=2, eos=-1, block=2)
+    rid = ref_loop.submit(prompt, max_new=8)
+    ref = {s.rid: s.tokens for s in ref_loop.run()}[rid]
+    assert len(ref) == 8              # budget-terminated: exactly max_new
+    eos = ref[3]
+    loop = ServeLoop(model, params, lanes=2, eos=eos, block=2)
+    rid_eos = loop.submit(prompt, max_new=8)                 # hits EOS at 3
+    other = _prompt(cfg, 32, seed=4)
+    rid_budget = loop.submit(other, max_new=5)               # budget-bound
+    done = {s.rid: s for s in loop.run()}
+    assert len(done[rid_eos].tokens) == 3                    # excl. EOS
+    assert done[rid_eos].tokens == ref[:3]
+    assert len(done[rid_budget].tokens) == 5
+    agg = loop.aggregate()
+    assert agg["tokens"] == 8                                # 3 + 5, no EOS
 
 
 def test_submit_keeps_queue_arrival_ordered(setup):
@@ -174,6 +198,235 @@ def test_submit_keeps_queue_arrival_ordered(setup):
     loop.submit(_prompt(cfg, 24), arrival=0.0)
     loop.submit(_prompt(cfg, 24), arrival=0.5)
     assert [r.arrival for r in loop.queue] == [0.0, 0.5, 0.5]
+
+
+# -- shape-stable bucketed prefill -------------------------------------------
+
+
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8"])
+def test_bucketed_prefill_parity(kv_dtype):
+    """Bucketed (right-padded + true-length-masked) prefill must be
+    bit-identical to a same-bucket full-batch prefill — logits and every
+    cache field, incl. the quantized mirrors — and must match the
+    exact-length oracle to float-association noise. Covers a prompt
+    SHORTER than sink_tokens + recent_window and one shorter than the
+    heavy budget (inert pad slots)."""
+    cfg = reduced(get_config("granite-3-2b"))
+    prune = dataclasses.replace(PRUNE, kv_dtype=kv_dtype)
+    model = Model(cfg, prune)
+    params = model.init(jax.random.PRNGKey(0))
+    prefill = jax.jit(model.prefill)
+    prefill_one = jax.jit(model.prefill_one)
+    bucket = 64
+    lens = [40, 37, 8]                # 8 < sink_tokens + recent_window = 10
+    prompts = [_prompt(cfg, t, seed=50 + i) for i, t in enumerate(lens)]
+    padded = np.zeros((len(lens), bucket), np.int64)
+    for i, p in enumerate(prompts):
+        padded[i, :len(p)] = p
+
+    # bucketed full-batch (mixed true lengths in one batch)
+    lg_full, st_full = prefill(params, {"tokens": jnp.asarray(padded),
+                                        "length": jnp.asarray(lens)})
+    # lane-inserted bucketed prefill_one — BIT-identical
+    state = model.init_decode_state(len(lens))
+    for i, t in enumerate(lens):
+        lg1, fresh = prefill_one(params, jnp.asarray(padded[i]),
+                                 jnp.asarray(t))
+        state = T.lane_insert(state, i, fresh)
+        np.testing.assert_array_equal(np.asarray(lg1),
+                                      np.asarray(lg_full[i]))
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(st_full)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # vs the exact-length oracle: logits + every cache field to float
+    # tolerance, all structural fields exactly
+    for i, (t, prompt) in enumerate(zip(lens, prompts)):
+        lg_e, st_e = prefill(params, {"tokens": jnp.asarray(prompt[None])})
+        np.testing.assert_allclose(np.asarray(lg_full[i]),
+                                   np.asarray(lg_e[0]),
+                                   rtol=1e-5, atol=1e-5)
+        kv_b = T.lane_slice(st_full, i).kv
+        for name, a, b in zip(kv_b._fields, kv_b, st_e.kv):
+            if a is None:
+                continue
+            a, b = np.asarray(a)[:, 0], np.asarray(b)[:, 0]
+            if name in ("valid", "pos", "fill", "step"):
+                np.testing.assert_array_equal(a, b, err_msg=name)
+            elif np.issubdtype(a.dtype, np.integer):
+                # int8 codes: float-association noise may flip a rounding
+                # boundary by one level
+                np.testing.assert_allclose(a.astype(np.int32),
+                                           b.astype(np.int32), atol=1,
+                                           err_msg=name)
+            else:
+                np.testing.assert_allclose(a.astype(np.float32),
+                                           b.astype(np.float32),
+                                           rtol=1e-4, atol=1e-5,
+                                           err_msg=name)
+    # the short prompt filled exactly its true length, not the bucket
+    assert np.asarray(st_full.kv.fill)[:, 2].max() == 8
+    assert np.asarray(st_full.kv.step)[:, 2].max() == 8
+
+
+def test_bucketed_prefill_bounds_compiles(setup):
+    """ISSUE acceptance: serving >= 8 distinct prompt lengths compiles at
+    most len(buckets) prefill programs (jit cache-miss counter), and the
+    generated tokens match the exact-length (unbucketed) engine."""
+    cfg, _, _ = setup
+    # fresh Prune/Model identity → fresh process-wide jit caches, so the
+    # cache-size counter below counts only THIS test's compiles
+    prune = dataclasses.replace(PRUNE, select_k=24)
+    model = Model(cfg, prune)
+    params = model.init(jax.random.PRNGKey(0))
+    lens = [9, 12, 17, 24, 31, 40, 47, 63, 64]        # 9 distinct lengths
+    buckets = (16, 32, 64)
+    loop = ServeLoop(model, params, lanes=2, eos=-1, block=2,
+                     buckets=buckets)
+    exact = ServeLoop(model, params, lanes=2, eos=-1, block=2, buckets=None)
+    rids, rids_e = [], []
+    for i, t in enumerate(lens):
+        prompt = _prompt(cfg, t, seed=80 + i)
+        rids.append(loop.submit(prompt, max_new=3))
+        rids_e.append(exact.submit(prompt, max_new=3))
+    done = {s.rid: s for s in loop.run()}
+    programs = loop.prefill_programs()
+    assert programs["jit_cache"] <= len(buckets)
+    assert programs["loop_shapes"] <= len(buckets)
+    assert {done[r].bucket for r in rids} == {16, 32, 64}
+    # the exact-length engine compiles one program per distinct length...
+    done_e = {s.rid: s for s in exact.run()}
+    assert exact.prefill_programs()["loop_shapes"] == len(set(lens))
+    # ...and bucketing changes nothing the user can see
+    for r, re_ in zip(rids, rids_e):
+        assert done[r].tokens == done_e[re_].tokens
+
+
+def test_chunked_prefill_admission(setup):
+    """Sarathi-style sliced admission: same tokens as whole-bucket
+    admission, prefill split into ceil(len/C) dispatches, decode lanes
+    keep running while a long prompt prefills."""
+    cfg, model, params = setup
+    reqs = [(40, 4), (64, 6), (24, 3), (57, 5), (8, 2)]
+    whole = ServeLoop(model, params, lanes=2, eos=-1, block=2)
+    sliced = ServeLoop(model, params, lanes=2, eos=-1, block=2,
+                       chunk_prefill=16)
+    rid_w, rid_s = [], []
+    for i, (t, mn) in enumerate(reqs):
+        prompt = _prompt(cfg, t, seed=60 + i)
+        rid_w.append(whole.submit(prompt, max_new=mn))
+        rid_s.append(sliced.submit(prompt, max_new=mn))
+    done_w = {s.rid: s for s in whole.run()}
+    done_s = {s.rid: s for s in sliced.run()}
+    import math
+    for (t, mn), rw, rs in zip(reqs, rid_w, rid_s):
+        assert done_s[rs].tokens == done_w[rw].tokens, (t, mn)
+        expect_chunks = math.ceil(t / 16) if t > 16 else 1
+        assert done_s[rs].prefill_chunks == expect_chunks
+    assert not sliced.active.any() and sliced._pending is None
+
+
+def test_chunked_prefill_bitwise_model_parity():
+    """Model-level: a chunked prefill with C == attn_chunk reproduces the
+    whole-bucket prefill bit-for-bit — logits and every cache field (the
+    scan accumulates column sums in the same association order)."""
+    import math
+    cfg = reduced(get_config("granite-3-2b"))
+    cfg = dataclasses.replace(cfg, attn_chunk=16)
+    model = Model(cfg, PRUNE)
+    params = model.init(jax.random.PRNGKey(0))
+    t, bucket, C = 40, 64, 16
+    prompt = _prompt(cfg, t, seed=9)
+    padded = np.zeros(bucket, np.int64)
+    padded[:t] = prompt
+    lg_w, st_w = jax.jit(model.prefill)(
+        params, {"tokens": jnp.asarray(padded[None]),
+                 "length": jnp.asarray([t])})
+    ps = model.init_prefill_chunk_state(1, bucket)
+    chunk = jax.jit(model.prefill_chunk)
+    n_chunks = math.ceil(t / C)
+    x_last = None
+    for ci in range(n_chunks):
+        x_last, ps = chunk(params, ps,
+                           jnp.asarray(padded[None, ci * C:(ci + 1) * C]),
+                           jnp.asarray(ci * C, jnp.int32),
+                           jnp.asarray([t]))
+    lg_c, st_c = jax.jit(model.prefill_finalize)(
+        params, ps, x_last, jnp.asarray((n_chunks - 1) * C, jnp.int32),
+        jnp.asarray([t]))
+    np.testing.assert_array_equal(np.asarray(lg_c), np.asarray(lg_w))
+    for a, b in zip(jax.tree.leaves(st_c), jax.tree.leaves(st_w)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_recurrent_family_falls_back_to_exact_length():
+    """ssm/hybrid/encdec can't mask right-padding out of their recurrent
+    state: the default buckets=\"auto\" must silently downgrade to
+    exact-length prefills instead of crashing at the first admit."""
+    cfg = reduced(get_config("mamba2-1.3b"))
+    from repro.core import baselines
+    model = Model(cfg, baselines.dense(128))
+    assert not model.supports_bucketed_prefill()
+    params = model.init(jax.random.PRNGKey(0))
+    loop = ServeLoop(model, params, lanes=2, eos=-1, block=2,
+                     chunk_prefill=8)           # both knobs must downgrade
+    assert loop.buckets is None and loop.chunk_prefill == 0
+    rid = loop.submit(_prompt(cfg, 24, seed=1), max_new=3)
+    done = {s.rid: s for s in loop.run()}
+    assert len(done[rid].tokens) == 3
+
+
+def test_immediate_eos_empty_output_ttft(setup):
+    """A request whose very FIRST generated token is EOS emits nothing;
+    its ttft must anchor at completion, never go negative, and not poison
+    the p50/p99 aggregates."""
+    cfg, model, params = setup
+    prompt = _prompt(cfg, 24, seed=3)
+    ref_loop = ServeLoop(model, params, lanes=2, eos=-1, block=2)
+    rid = ref_loop.submit(prompt, max_new=8)
+    first = {s.rid: s.tokens for s in ref_loop.run()}[rid][0]
+    loop = ServeLoop(model, params, lanes=2, eos=first, block=2)
+    rid2 = loop.submit(prompt, max_new=8)
+    st = {s.rid: s for s in loop.run()}[rid2]
+    assert st.tokens == []
+    assert st.t_admit <= st.t_first <= st.t_done
+    assert st.ttft >= 0
+    assert loop.aggregate()["p99_ttft_s"] >= 0
+
+
+def test_chunked_prefill_ragged_bucket_uses_rounded_workspace(setup):
+    """A bucket that is not a multiple of chunk_prefill (here: exact-length
+    mode) must round the workspace up so every slice is full-width — one
+    (C, ws) program, no silent ragged-tail compile — and still produce the
+    whole-admission tokens."""
+    cfg, model, params = setup
+    prompt = _prompt(cfg, 57, seed=71)
+    whole = ServeLoop(model, params, lanes=2, eos=-1, block=2, buckets=None)
+    rw = whole.submit(prompt, max_new=4)
+    sliced = ServeLoop(model, params, lanes=2, eos=-1, block=2,
+                       buckets=None, chunk_prefill=16)
+    rs = sliced.submit(prompt, max_new=4)
+    out_w = {s.rid: s.tokens for s in whole.run()}[rw]
+    done_s = {s.rid: s for s in sliced.run()}[rs]
+    assert done_s.tokens == out_w
+    assert done_s.prefill_chunks == 4          # ceil(57/16)
+    assert ("chunk", 16, 64) in sliced._prefill_shapes
+
+
+def test_greedy_generate_sampling_default_key(setup):
+    """temperature > 0 with the default key=None must sample, not crash
+    (jax.random.split(None) regression)."""
+    from repro.launch.serve import greedy_generate
+    cfg, model, params = setup
+    batch = {"tokens": jnp.asarray(_prompt(cfg, 16, seed=1)[None])}
+    toks, _ = greedy_generate(model, params, batch, steps=4,
+                              temperature=1.0)
+    assert toks.shape == (1, 4)
+    # and an explicit key is reproducible
+    t1, _ = greedy_generate(model, params, batch, steps=4, temperature=1.0,
+                            key=jax.random.PRNGKey(7))
+    t2, _ = greedy_generate(model, params, batch, steps=4, temperature=1.0,
+                            key=jax.random.PRNGKey(7))
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
 
 
 def test_metrics_sanity(setup):
@@ -188,6 +441,8 @@ def test_metrics_sanity(setup):
     assert agg["tokens_per_s"] > 0
     assert agg["wall_s"] > 0
     assert 0 < agg["mean_occupancy"] <= 1
+    assert 0 <= agg["p50_ttft_s"] <= agg["p99_ttft_s"]
+    assert agg["prefill_programs"] >= 1
     for s in done:
         assert len(s.tokens) == s.max_new    # incl. the prefill-only one
         assert 0 <= s.t_admit <= s.t_done

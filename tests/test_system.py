@@ -107,7 +107,8 @@ def test_serve_loop_continuous_batching():
 def test_serve_loop_block_decode_matches_single_step():
     """block>1 dispatch: the host-side bookkeeping must emit exactly the
     per-step loop's tokens, truncated at an EOS that lands MID-block (the
-    speculative steps after it are computed but dropped)."""
+    speculative steps after it are computed but dropped; the EOS itself is
+    a stop signal, not an output token)."""
     cfg, model, params = _model()
     prompts = np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 64))
     ref = ServeLoop(model, params, lanes=2, prompt_len=64, max_new=6)
@@ -117,12 +118,7 @@ def test_serve_loop_block_decode_matches_single_step():
     eos = ref.outputs[0][2]          # lane 0 hits EOS at step 2 of block 3
 
     def trunc(seq):
-        out = []
-        for t in seq:
-            out.append(t)
-            if t == eos:
-                break
-        return out
+        return seq[:seq.index(eos)] if eos in seq else seq
 
     blk = ServeLoop(model, params, lanes=2, prompt_len=64, max_new=6,
                     eos=eos, block=3)
