@@ -44,6 +44,7 @@ def step_flops(n_attend: int, n_scored: int) -> int:
 
 def run():
     results = {}
+    summary = {}
     labels = (("no_prune", 0.0), ("prune50", 0.5)) if common.SMOKE else \
         (("no_prune", 0.0), ("prune50", 0.5), ("prune80", 0.8))
     modes = (("1bit", 1),) if common.SMOKE else (("1bit", 1), ("3bit", 3))
@@ -97,8 +98,13 @@ def run():
                  f"aedp_reduction_vs_dense={base / aedp:.1f}x;"
                  f"resident_B={resident};moved_B={moved};"
                  f"delay_us={delay * 1e6:.3f}" + fused_note)
+            summary[f"{label}_{mode}_us"] = us
+            summary[f"{label}_{mode}_reduction_vs_dense"] = base / aedp
             if label == "no_prune":
                 break   # dense is bit-independent
+    # machine-readable trajectory (written to BENCH_aedp.json by
+    # `benchmarks/run.py --smoke`; CI compares against the committed copy)
+    return summary
 
 
 if __name__ == "__main__":

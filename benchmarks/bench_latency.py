@@ -39,6 +39,7 @@ def _scan_fn(prune):
 
 def run():
     ctxs = (512,) if common.SMOKE else (512, 1024, 2048, 4096)
+    summary = {}
     for ctx in ctxs:
         budget = 576
         dense = baselines.dense(ctx)
@@ -81,6 +82,20 @@ def run():
              f"fused_vs_composed={rows['unicaim'][0] / rows['fused'][0]:.2f}x;"
              f"scan={rows['unicaim'][1] / rows['fused'][1]:.2f}x;"
              f"scan_vs_perstep={rows['fused'][0] / rows['fused'][1]:.2f}x")
+        summary.update({
+            f"dense_us_ctx{ctx}": rows["dense"][0],
+            f"unicaim_us_ctx{ctx}": rows["unicaim"][0],
+            f"fused_us_ctx{ctx}": rows["fused"][0],
+            f"unicaim_scan_us_ctx{ctx}": rows["unicaim"][1],
+            f"fused_scan_us_ctx{ctx}": rows["fused"][1],
+            f"speedup_vs_dense_ctx{ctx}":
+                rows["dense"][0] / rows["unicaim"][0],
+            f"fused_speedup_ctx{ctx}":
+                rows["unicaim"][0] / rows["fused"][0],
+        })
+    # machine-readable trajectory (written to BENCH_latency.json by
+    # `benchmarks/run.py --smoke`; CI compares against the committed copy)
+    return summary
 
 
 if __name__ == "__main__":

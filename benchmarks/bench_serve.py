@@ -10,6 +10,11 @@ Rows (CSV: name,us_per_call,derived):
                             comparison row: one program per distinct length)
   serve_chunked_<tag>       Sarathi-style sliced-prefill admission
   serve_load_<tag>_r<rate>  offered-load sweep (requests arrive rate/s)
+  serve_admit_seq_<tag>     bursty same-bucket arrivals, sequential
+                            admission (one prefill + splice per request)
+  serve_admit_grouped_<tag> same burst, grouped admission (one batched
+                            prefill + one multi-lane splice per group) —
+                            the dispatch-count rows for the ISSUE gate
 
 'Useful tokens' counts each request's own `max_new`: the old loop forces
 every lane in a group to the group's max budget over equally padded
@@ -68,9 +73,10 @@ def _run_static(model, params, reqs, lanes):
 
 
 def _run_continuous(model, params, reqs, lanes, rate=None, buckets="auto",
-                    chunk_prefill=0):
+                    chunk_prefill=0, group_admit=True):
     loop = ServeLoop(model, params, lanes=lanes, eos=-1, block=BLOCK,
-                     buckets=buckets, chunk_prefill=chunk_prefill)
+                     buckets=buckets, chunk_prefill=chunk_prefill,
+                     group_admit=group_admit)
     for i, (prompt, mn) in enumerate(reqs):
         loop.submit(prompt, max_new=mn,
                     arrival=0.0 if rate is None else i / rate)
@@ -157,6 +163,52 @@ def run():
                  f"prefill_compiles={agg_c['prefill_programs']:.0f}")
             summary["chunked_tok_s"] = agg_c["tokens"] / dt_ch
             summary["chunked_p99_ttft_s"] = agg_c["p99_ttft_s"]
+            # grouped vs sequential admission on a bursty same-bucket
+            # arrival set (every prompt pads to one bucket, all arrive at
+            # t=0): grouped admits lane-count-sized groups with ONE
+            # batched prefill + ONE multi-lane splice each, so it must
+            # show fewer prefill dispatches at >= the sequential tok/s
+            # (the ISSUE acceptance row). Equal budgets keep the pairing
+            # deterministic; best-of-3 because shared-CPU walls are noisy.
+            # many short-budget requests keep admission (the thing being
+            # measured) a large fraction of the wall next to the decode
+            # blocks. Shared-CPU noise spikes last longer than one run,
+            # so the two modes are timed in ALTERNATING back-to-back
+            # pairs (a contention window hits both) and each side takes
+            # its best-of-6 floor — the least noise-sensitive estimator
+            # under one-sided contention noise.
+            burst = _request_set(cfg.vocab_size, max(16, 4 * lanes),
+                                 (33, 40, 37, 47), (4,), seed=3)
+            for ga in (False, True):
+                _run_continuous(model, params, burst, lanes, group_admit=ga)
+            runs_s, runs_g = [], []
+            for _ in range(6):
+                runs_s.append(_run_continuous(model, params, burst, lanes,
+                                              group_admit=False))
+                runs_g.append(_run_continuous(model, params, burst, lanes,
+                                              group_admit=True))
+            agg_s, dt_sq = min(runs_s, key=lambda r: r[1])
+            agg_g, dt_g = min(runs_g, key=lambda r: r[1])
+            emit(f"serve_admit_seq_{tag}", dt_sq * 1e6,
+                 f"tok_s={agg_s['tokens'] / dt_sq:.1f};"
+                 f"prefill_dispatches={agg_s['prefill_dispatches']:.0f};"
+                 f"admit_dispatches={agg_s['admit_dispatches']:.0f}")
+            emit(f"serve_admit_grouped_{tag}", dt_g * 1e6,
+                 f"tok_s={agg_g['tokens'] / dt_g:.1f};"
+                 f"prefill_dispatches={agg_g['prefill_dispatches']:.0f};"
+                 f"admit_dispatches={agg_g['admit_dispatches']:.0f};"
+                 f"grouped_requests={agg_g['grouped_requests']:.0f};"
+                 f"vs_sequential={dt_sq / dt_g:.2f}x")
+            summary.update({
+                "burst_requests": float(len(burst)),
+                "seq_admit_tok_s": agg_s["tokens"] / dt_sq,
+                "grouped_admit_tok_s": agg_g["tokens"] / dt_g,
+                "seq_prefill_dispatches": agg_s["prefill_dispatches"],
+                "grouped_prefill_dispatches": agg_g["prefill_dispatches"],
+                "seq_admit_dispatches": agg_s["admit_dispatches"],
+                "grouped_admit_dispatches": agg_g["admit_dispatches"],
+                "grouped_requests": agg_g["grouped_requests"],
+            })
         if not common.SMOKE and tag == "unicaim":
             for rate in (20.0, 5.0):
                 agg, _ = _run_continuous(model, params, reqs, lanes,

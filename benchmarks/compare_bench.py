@@ -1,0 +1,87 @@
+"""Warn-only regression check: fresh smoke-bench JSON vs committed baseline.
+
+Committed baselines live in ``benchmarks/baselines/`` (the smoke sweep's
+outputs in the repo root are gitignored); refresh them by copying a fresh
+smoke run's ``BENCH_*.json`` over them in the same PR that changes the
+performance. CI runs::
+
+    python benchmarks/compare_bench.py \
+        benchmarks/baselines/BENCH_serve.json BENCH_serve.json
+
+Throughput-style keys (``*tok_s*``) warn when the fresh value drops below
+``TOL`` of the baseline; count-style keys (``*compile*`` / ``*dispatch*``)
+warn when the fresh value EXCEEDS the baseline (dispatch/compile counts
+are deterministic — more of them means an admission/bucketing regression,
+not noise). Everything else is informational. The exit code is always 0:
+shared CI runners are far too noisy for a hard wall-clock gate, so this
+is a trajectory tripwire, not a merge blocker. Warnings use GitHub
+``::warning::`` annotations so they surface on the PR checks page.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+TOL = 0.7        # throughput may dip to 70% of baseline before warning
+
+
+def classify(key: str) -> str:
+    if "tok_s" in key:
+        return "throughput"
+    if "compile" in key or "dispatch" in key:
+        return "count"
+    return "info"
+
+
+def compare(baseline: dict, fresh: dict) -> list:
+    """[(level, message)] — level 'warning' or 'notice'."""
+    out = []
+    for key in sorted(set(baseline) & set(fresh)):
+        base, cur = baseline[key], fresh[key]
+        if not isinstance(base, (int, float)) \
+                or not isinstance(cur, (int, float)):
+            continue
+        kind = classify(key)
+        if kind == "throughput" and cur < TOL * base:
+            out.append(("warning",
+                        f"{key}: {cur:.1f} tok/s < {TOL:.0%} of committed "
+                        f"baseline {base:.1f}"))
+        elif kind == "count" and cur > base:
+            out.append(("warning",
+                        f"{key}: {cur:.0f} exceeds committed baseline "
+                        f"{base:.0f} (dispatch/compile regression)"))
+        else:
+            out.append(("notice", f"{key}: {base:g} -> {cur:g}"))
+    for key in sorted(set(baseline) - set(fresh)):
+        out.append(("warning", f"{key}: present in baseline, missing from "
+                               "fresh run"))
+    return out
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) != 2:
+        print("usage: compare_bench.py <baseline.json> <fresh.json>")
+        return 0
+    try:
+        with open(argv[0]) as f:
+            baseline = json.load(f)
+        with open(argv[1]) as f:
+            fresh = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:    # warn-only by design
+        print(f"::warning::bench compare skipped: {e}")
+        return 0
+    warned = 0
+    for level, msg in compare(baseline, fresh):
+        if level == "warning":
+            warned += 1
+            print(f"::warning::{msg}")
+        else:
+            print(msg)
+    print(f"{warned} warning(s) vs committed baseline (warn-only, "
+          "never fails the build)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

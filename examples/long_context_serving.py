@@ -46,7 +46,9 @@ def main():
         if params is None:
             params = model.init(jax.random.PRNGKey(0))
         # bucketed prefill (default) bounds the prefill jit cache;
-        # chunk_prefill=64 interleaves long prefills with decode blocks
+        # chunk_prefill=64 interleaves long prefills with decode blocks;
+        # grouped admission (default) batches same-bucket arrivals into
+        # one prefill dispatch + one multi-lane splice
         loop = ServeLoop(model, params, lanes=LANES, block=8,
                          chunk_prefill=64)
         for prompt, (_, max_new, arrival) in zip(prompts, REQUESTS):
@@ -61,12 +63,16 @@ def main():
               f"mean_latency={agg['mean_latency_s']:.2f}s "
               f"p99_ttft={agg['p99_ttft_s']:.2f}s "
               f"occ={agg['mean_occupancy']:.2f} "
-              f"prefill_programs={loop.prefill_programs()['loop_shapes']}")
+              f"prefill_programs={loop.prefill_programs()['loop_shapes']} "
+              f"dispatches={loop.counters['prefill_dispatches']}pf/"
+              f"{loop.counters['admit_dispatches']}adm "
+              f"({loop.counters['grouped_requests']} grouped)")
         for s in sorted(stats, key=lambda s: s.rid):
             print(f"    req {s.rid}: lane={s.lane} prompt={s.prompt_len:4d} "
                   f"bucket={s.bucket:4d} chunks={s.prefill_chunks} "
                   f"new={len(s.tokens):3d} latency={s.latency:5.2f}s "
-                  f"ttft={s.ttft:5.2f}s occ={s.occupancy:.2f}")
+                  f"ttft={s.ttft:5.2f}s occ={s.occupancy:.2f} "
+                  f"group={s.group_size}")
 
 
 if __name__ == "__main__":

@@ -115,6 +115,32 @@ def lane_insert(cache: KVCache, lane, fresh: KVCache,
     return KVCache(*(ins(a, f) for a, f in zip(cache, fresh)))
 
 
+def lanes_insert(cache: KVCache, src, fresh: KVCache,
+                 batch_axis: int = 0) -> KVCache:
+    """Multi-lane splice: scatter rows of a batch-G `fresh` cache into a
+    live cache in ONE shot (grouped admission).
+
+    `src` is an int32 [B_live] map from live lane to `fresh` row: lane b
+    takes `fresh` row `src[b]` when `src[b] >= 0` and keeps its current
+    contents at -1. Formulated as gather + select (not a scatter) so the
+    compiled program is shape-stable in the group size: how many lanes a
+    round actually fills is data, not shape. Writes exact copies of every
+    field — bit-identical to G sequential `lane_insert` calls."""
+    src = jnp.asarray(src, jnp.int32)
+    keep = src < 0
+    idx = jnp.maximum(src, 0)
+
+    def ins(a, f):
+        if a is None:
+            return None
+        g = jnp.take(f.astype(a.dtype), idx, axis=batch_axis)
+        m = keep.reshape((1,) * batch_axis + (-1,)
+                         + (1,) * (a.ndim - batch_axis - 1))
+        return jnp.where(m, a, g)
+
+    return KVCache(*(ins(a, f) for a, f in zip(cache, fresh)))
+
+
 def lane_reset(cache: KVCache, lane, batch_axis: int = 0) -> KVCache:
     """Return `cache` with one lane emptied (as `init_cache` would make it)."""
     def blank(a, fill_value=0):

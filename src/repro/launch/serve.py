@@ -2,12 +2,16 @@
 
 The engine keeps a fixed number of decode *lanes* (batch slots) and a
 request queue. Each request carries its own prompt (arbitrary length ≤ max)
-and `max_new` budget; it is prefilled on its own (`Model.prefill_one`) and
-spliced into a free lane of the live batched `DecodeState`
-(`transformer.lane_insert`) without disturbing the other lanes. Decode runs
-as a single jitted multi-step `lax.scan` over the whole lane batch — one
-dispatch per block of tokens — with the state donated so XLA updates it in
-place.
+and `max_new` budget. Admission is *grouped*: every arrived request that
+pads to the same bucket is prefilled in ONE batched dispatch
+(`Model.prefill_group`) and spliced into the free lanes of the live
+batched `DecodeState` with ONE vectorized multi-lane insert
+(`transformer.lanes_insert`) — shortest-bucket-first under load so short
+prompts are never starved behind a long arrival; a lone request takes the
+batch-1 path (`Model.prefill_one` + `lane_insert`). Decode runs as a
+single jitted multi-step `lax.scan` over the whole lane batch — one
+dispatch per block of tokens — with the state donated so XLA updates it
+in place.
 
 Termination is **in-device**: an `active` lane mask rides through the
 scanned block, finished lanes stop contributing state writes, and the block
@@ -35,7 +39,8 @@ import numpy as np
 
 from repro.configs.base import get_config, reduced
 from repro.core import baselines
-from repro.models.transformer import Model, lane_insert, lane_select
+from repro.models.transformer import (Model, lane_insert, lane_select,
+                                      lanes_insert)
 
 
 # ---------------------------------------------------------------------------
@@ -80,17 +85,20 @@ def pad_to_bucket(prompt: np.ndarray,
 
 
 def greedy_generate(model: Model, params, batch, steps: int,
-                    temperature: float = 0.0, key=None):
+                    temperature: float = 0.0, key=None, top_k: int = 0):
     """Prefill + `steps` decode steps. Returns [B, steps] generated ids.
 
-    One Python dispatch per token — the reference loop (and the only one
-    that supports sampling); production serving uses the scanned paths.
-    `key` defaults to PRNGKey(0) when sampling (temperature > 0).
+    One Python dispatch per token — the REFERENCE loop. Production
+    serving uses the scanned paths, which support the same
+    temperature/top-k sampling in-device (`ServeLoop(temperature=...,
+    top_k=...)` / `decode_block_masked`); this loop shares their
+    `_next_token` rule, so both stay interchangeable. `key` defaults to
+    PRNGKey(0) when sampling (temperature > 0).
     """
     if temperature > 0 and key is None:
         key = jax.random.PRNGKey(0)
-    logits, state = jax.jit(model.prefill)(params, batch)
-    decode = jax.jit(model.decode_step)
+    logits, state = _prefill_fn(_model_key(model))(params, batch)
+    decode = _decode_step_fn(_model_key(model))
     toks = []
     tok = jnp.argmax(logits, -1)
     for i in range(steps):
@@ -98,9 +106,9 @@ def greedy_generate(model: Model, params, batch, steps: int,
         logits, state = decode(params, state, tok)
         if temperature > 0:
             key, sub = jax.random.split(key)
-            tok = jax.random.categorical(sub, logits / temperature, axis=-1)
         else:
-            tok = jnp.argmax(logits, -1)
+            sub = key
+        tok = _next_token(logits, sub, temperature, top_k)
     return jnp.stack(toks, axis=1), state
 
 
@@ -121,35 +129,62 @@ def decode_block(model: Model, params, state, tok, steps: int):
     return state, tok, toks
 
 
-def decode_block_masked(model: Model, params, state, tok, active, rem,
-                        steps: int, eos: int):
-    """`steps` greedy decode steps with in-device per-lane termination.
+def _next_token(logits, key, temperature: float, top_k: int):
+    """Next-token rule shared by the decode block and admission seeding:
+    argmax when temperature == 0 (key unused), else categorical over
+    logits/temperature, optionally truncated to the per-row top_k.
+    logits: [..., V] → [...] token ids."""
+    if temperature <= 0:
+        return jnp.argmax(logits, -1)
+    if top_k > 0:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits / temperature, axis=-1)
 
-    active: [B] bool lane-live mask; rem: [B] int32 remaining budget.
-    Each step emits the carried token for active lanes, then advances; a
-    lane deactivates on EOS (if eos >= 0) or on exhausting its budget, and
-    from then on its state is frozen (lane_select drops its writes) while
-    the other lanes keep decoding. The EOS token itself is a stop signal,
-    NOT an output: it is never emitted (it would otherwise inflate token
-    counts and every tokens/s metric derived from them), while
-    budget-terminated lanes still emit exactly their `rem` tokens. Returns
-    (state, tok, active, rem, toks [steps, B], emitted [steps, B]).
+
+def decode_block_masked(model: Model, params, state, tok, active, rem,
+                        eos, key, steps: int, temperature: float = 0.0,
+                        top_k: int = 0):
+    """`steps` decode steps with in-device per-lane termination.
+
+    active: [B] bool lane-live mask; rem: [B] int32 remaining budget;
+    eos: RUNTIME scalar int32 (a traced argument, not a compile-time
+    constant — one compiled program per `steps` serves every eos id;
+    token ids are >= 0, so eos = -1 simply never matches); key: PRNG key
+    threaded through the scan carry (ignored when greedy). Each step
+    emits the carried token for active lanes, then advances; a lane
+    deactivates on EOS or on exhausting its budget, and from then on its
+    state is frozen (lane_select drops its writes) while the other lanes
+    keep decoding. The EOS token itself is a stop signal, NOT an output:
+    it is never emitted (it would otherwise inflate token counts and
+    every tokens/s metric derived from them), while budget-terminated
+    lanes still emit exactly their `rem` tokens.
+
+    `temperature`/`top_k` are compile-time sampling knobs: temperature 0
+    (default) keeps the bitwise-greedy argmax path with no RNG in the
+    loop; temperature > 0 samples from logits/temperature, optionally
+    truncated to the top_k highest-probability tokens per lane. Returns
+    (state, tok, active, rem, key, toks [steps, B], emitted [steps, B]).
     """
     def body(carry, _):
-        state, tok, active, rem = carry
+        state, tok, active, rem, key = carry
         logits, new_state = model.decode_step(params, state, tok)
         state = lane_select(active, new_state, state)
         live = active & (rem > 0)      # robust to active lanes w/o budget
-        is_eos = (tok == eos) if eos >= 0 else jnp.zeros_like(active)
-        emit = live & ~is_eos
+        emit = live & (tok != eos)
         rem = rem - emit.astype(rem.dtype)
         active = emit & (rem > 0)
-        nxt = jnp.argmax(logits, -1).astype(tok.dtype)
-        return (state, nxt, active, rem), (tok, emit)
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+        else:
+            sub = key
+        nxt = _next_token(logits, sub, temperature, top_k).astype(tok.dtype)
+        return (state, nxt, active, rem, key), (tok, emit)
 
-    (state, tok, active, rem), (toks, emitted) = jax.lax.scan(
-        body, (state, tok, active, rem), None, length=steps)
-    return state, tok, active, rem, toks, emitted
+    eos = jnp.asarray(eos, jnp.int32)
+    (state, tok, active, rem, key), (toks, emitted) = jax.lax.scan(
+        body, (state, tok, active, rem, key), None, length=steps)
+    return state, tok, active, rem, key, toks, emitted
 
 
 def _donate_argnums(*argnums):
@@ -183,10 +218,15 @@ def _block_fn(key, steps: int):
 
 
 @functools.lru_cache(maxsize=32)
-def _masked_block_fn(key, steps: int, eos: int):
+def _masked_block_fn(key, steps: int, temperature: float = 0.0,
+                     top_k: int = 0):
+    # keyed on `steps` (+ the static sampling knobs) ONLY: eos and the
+    # PRNG key are runtime arguments, so one compiled program serves
+    # every (steps, eos) combination instead of one per pair
     model = _rebuild(*key)
-    fn = functools.partial(decode_block_masked, model, steps=steps, eos=eos)
-    return jax.jit(fn, donate_argnums=_donate_argnums(1, 2, 3, 4))
+    fn = functools.partial(decode_block_masked, model, steps=steps,
+                           temperature=temperature, top_k=top_k)
+    return jax.jit(fn, donate_argnums=_donate_argnums(1, 2, 3, 4, 6))
 
 
 @functools.lru_cache(maxsize=32)
@@ -197,6 +237,16 @@ def _prefill_fn(key):
 @functools.lru_cache(maxsize=32)
 def _prefill_one_fn(key):
     return jax.jit(_rebuild(*key).prefill_one)
+
+
+@functools.lru_cache(maxsize=32)
+def _prefill_group_fn(key):
+    return jax.jit(_rebuild(*key).prefill_group)
+
+
+@functools.lru_cache(maxsize=32)
+def _decode_step_fn(key):
+    return jax.jit(_rebuild(*key).decode_step)
 
 
 @functools.lru_cache(maxsize=32)
@@ -216,17 +266,45 @@ def _jit_decode_block(model: Model, steps: int):
     return _block_fn(_model_key(model), steps)
 
 
-def _admit_lane_state(state, tok, lane, fresh, logits):
+def _admit_lane_state(state, tok, lane, fresh, logits, key,
+                      temperature: float = 0.0, top_k: int = 0):
     """One-dispatch admission: splice `fresh` into `lane` and seed its
-    first token from the prefill logits (state/tok donated in place)."""
+    first token from the prefill logits — via the engine's next-token
+    rule, so sampling covers the FIRST generated token too, not just the
+    scanned steps (state/tok donated in place; key unused when greedy)."""
     state = lane_insert(state, lane, fresh)
-    tok = tok.at[lane].set(jnp.argmax(logits, -1).astype(tok.dtype))
+    seed = _next_token(logits, key, temperature, top_k)
+    tok = tok.at[lane].set(seed.astype(tok.dtype))
     return state, tok
 
 
-@functools.lru_cache(maxsize=1)
-def _admit_fn():
-    return jax.jit(_admit_lane_state, donate_argnums=_donate_argnums(0, 1))
+@functools.lru_cache(maxsize=8)
+def _admit_fn(temperature: float = 0.0, top_k: int = 0):
+    fn = functools.partial(_admit_lane_state, temperature=temperature,
+                           top_k=top_k)
+    return jax.jit(fn, donate_argnums=_donate_argnums(0, 1))
+
+
+def _admit_group_state(state, tok, src, fresh, logits, key,
+                       temperature: float = 0.0, top_k: int = 0):
+    """One-dispatch grouped admission: splice every mapped row of the
+    batch-G `fresh` state into the live state (`lanes_insert` over the
+    whole pytree) and seed each spliced lane's first token from its row
+    of the group-prefill logits (sampled per row when temperature > 0).
+    `src` maps live lane -> fresh row (-1 = lane untouched); state/tok
+    donated in place."""
+    state = lanes_insert(state, src, fresh)
+    seeded = _next_token(logits, key, temperature, top_k)      # [G]
+    picked = jnp.take(seeded.astype(tok.dtype), jnp.maximum(src, 0))
+    tok = jnp.where(src >= 0, picked, tok)
+    return state, tok
+
+
+@functools.lru_cache(maxsize=8)
+def _admit_group_fn(temperature: float = 0.0, top_k: int = 0):
+    fn = functools.partial(_admit_group_state, temperature=temperature,
+                           top_k=top_k)
+    return jax.jit(fn, donate_argnums=_donate_argnums(0, 1))
 
 
 def generate_scan(model: Model, params, batch, steps: int):
@@ -235,7 +313,7 @@ def generate_scan(model: Model, params, batch, steps: int):
     The decode block is jitted with the (state, token) carry donated; under
     an outer jit the inner jit inlines and the whole call stays traceable.
     """
-    logits, state = jax.jit(model.prefill)(params, batch)
+    logits, state = _prefill_fn(_model_key(model))(params, batch)
     tok0 = jnp.argmax(logits, -1)
     state, _, toks = _jit_decode_block(model, steps)(params, state, tok0)
     return toks.swapaxes(0, 1), state
@@ -246,14 +324,18 @@ def generate_scan(model: Model, params, batch, steps: int):
 # ---------------------------------------------------------------------------
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class Request:
     """One generation request. `arrival` is seconds from `run()` start
-    (0 = already waiting); `submit()` keeps the queue arrival-ordered."""
+    (0 = already waiting); `submit()` keeps the queue arrival-ordered.
+    Identity-compared (eq=False): the scheduler removes grouped requests
+    from the queue by identity, and field equality over an ndarray prompt
+    is ill-defined anyway."""
     rid: int
     prompt: np.ndarray
     max_new: int
     arrival: float = 0.0
+    bucket: int = 0            # memoized pad width under the loop's grid
 
 
 @dataclasses.dataclass
@@ -273,6 +355,8 @@ class RequestStats:
     occupancy: float = 0.0     # mean cache fill fraction at completion
     bucket: int = 0            # padded prefill width (== prompt_len unbucketed)
     prefill_chunks: int = 1    # dispatches the prefill was sliced into
+    admit_seq: int = -1        # admission order (0 = admitted first)
+    group_size: int = 1        # requests sharing this admission dispatch
 
     @property
     def latency(self) -> float:
@@ -311,10 +395,35 @@ class ServeLoop:
         loop.submit(prompt_b, max_new=16)
         stats = loop.run()                    # List[RequestStats]
 
-    Lanes are admitted independently (prefill_one + lane_insert), freed on
-    EOS/budget **in-device**, and refilled from the queue mid-flight. The
-    legacy all-lanes API (`admit(prompts)` + `step()`/`step_block()`) drives
-    the same engine with a single full-batch prefill.
+    Lanes are freed on EOS/budget **in-device** and refilled from the
+    queue mid-flight. The legacy all-lanes API (`admit(prompts)` +
+    `step()`/`step_block()`) drives the same engine with a single
+    full-batch prefill.
+
+    **Grouped admission (default).** At each admission point the
+    scheduler collects every already-arrived queue request that pads to
+    the SAME bucket (up to the number of free lanes) and admits the whole
+    group with ONE batched prefill dispatch (`Model.prefill_group`) plus
+    ONE vectorized multi-lane splice (`transformer.lanes_insert` over the
+    whole DecodeState pytree) — replacing G (prefill_one + lane_insert)
+    dispatch pairs. Under load (more arrived requests than free lanes)
+    the group is chosen **shortest-bucket-first**, so a burst of short
+    prompts is never starved behind one long arrival — bounded by aging
+    (`max_head_skips`: after the FIFO head is passed over that many
+    rounds in a row its bucket is forced, so long prompts can't starve
+    indefinitely either); off load the FIFO head always leads the
+    admission, with same-bucket followers riding along in its group (a
+    later same-bucket arrival can therefore be admitted ahead of an
+    earlier different-bucket one — order is FIFO per bucket, not
+    globally). The group
+    prefill is padded up to the next power-of-two row count (duplicating
+    a real row; surplus rows are dropped by the splice's source map), so
+    the jit cache holds at most log2(lanes)+1 group programs per bucket
+    while a small group never pays a full lanes-row prefill. A grouped
+    admission is bit-identical to admitting the same requests
+    sequentially — it is purely a dispatch-count optimization
+    (`group_admit=False` restores the sequential path; the `counters`
+    dict tracks prefill/admit/decode dispatches either way).
 
     `block` sets how many tokens each dispatch decodes: the scanned block
     amortizes launch overhead across `block` tokens, at the cost of up to
@@ -332,6 +441,17 @@ class ServeLoop:
     sorted tuple to pin the grid, or `buckets=None` for legacy
     exact-length prefills (one compile per distinct length).
 
+    **Sampling** (`temperature`, `top_k`): temperature > 0 switches the
+    engine from argmax to categorical sampling over logits/temperature
+    (optionally truncated to the top_k most likely tokens per lane) —
+    covering the admission-seeded FIRST token as well as the scanned
+    decode steps — with the PRNG key threaded through the scan carry
+    and advanced once per generated step; `sample_seed` pins the
+    stream. The stream consumption order follows the dispatch schedule,
+    so grouped and sequential admission draw different (equally valid)
+    samples. Greedy (temperature=0, the default) stays bitwise-unchanged
+    and carries no RNG.
+
     **Chunked-prefill admission** (`chunk_prefill=C`, Sarathi-style): a
     prompt whose bucket exceeds C is prefilled in C-token slices that
     interleave with decode blocks — one slice, one decode block, … — so a
@@ -347,7 +467,10 @@ class ServeLoop:
                  prompt_len: Optional[int] = None, max_new: int = 64,
                  eos: int = -1, block: int = 1,
                  buckets: Union[str, Sequence[int], None] = "auto",
-                 chunk_prefill: int = 0):
+                 chunk_prefill: int = 0, group_admit: bool = True,
+                 max_head_skips: int = 8,
+                 temperature: float = 0.0, top_k: int = 0,
+                 sample_seed: int = 0):
         self.model = model
         self.params = params
         self.lanes = lanes
@@ -362,8 +485,15 @@ class ServeLoop:
         self.chunk_prefill = max(0, chunk_prefill)
         if self.chunk_prefill and not model.supports_chunked_prefill():
             self.chunk_prefill = 0            # documented fallback
+        self.group_admit = bool(group_admit)
+        self.max_head_skips = max(0, max_head_skips)
+        self._head_skips = 0
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
+        self._key = jax.random.PRNGKey(sample_seed)
         self._prefill = _prefill_fn(_model_key(model))
         self._prefill_one = _prefill_one_fn(_model_key(model))
+        self._prefill_group = _prefill_group_fn(_model_key(model))
         self._chunk = _prefill_chunk_fn(_model_key(model))
         self._finalize = _prefill_finalize_fn(_model_key(model))
         self.state = None
@@ -380,6 +510,15 @@ class ServeLoop:
         self._t0: Optional[float] = None
         self._pending: Optional[_ChunkedPrefill] = None
         self._prefill_shapes: set = set()     # (kind, width) seen this loop
+        self._admit_seq = 0
+        # dispatch accounting: how many device calls each stage issued
+        # (prefill_dispatches counts whole-prompt/group prefills and
+        # chunked finalizes; chunk slices are tallied separately)
+        self.counters: Dict[str, int] = {
+            "prefill_dispatches": 0, "admit_dispatches": 0,
+            "chunk_dispatches": 0, "decode_blocks": 0,
+            "grouped_admissions": 0, "grouped_requests": 0,
+        }
 
     # -- time ----------------------------------------------------------------
 
@@ -396,6 +535,7 @@ class ServeLoop:
         prompt = np.asarray(prompt)
         req = Request(rid, prompt,
                       self.max_new if max_new is None else max_new, arrival)
+        req.bucket = self._bucket_of(req)     # memoized for the scheduler
         if self.queue and arrival < self.queue[-1].arrival:
             # keep arrival order (FIFO among ties) — schedule() peeks head
             idx = next(i for i, r in enumerate(self.queue)
@@ -423,6 +563,13 @@ class ServeLoop:
         padded, _ = pad_to_bucket(prompt, grid)
         return padded, len(padded)
 
+    def _bucket_of(self, req: Request) -> int:
+        """Bucket width alone (no padding allocation — scheduler hot path)."""
+        if self.buckets is None:
+            return len(req.prompt)
+        grid = None if self.buckets == "auto" else self.buckets
+        return bucket_length(len(req.prompt), grid)
+
     def _admit_lane(self, lane: int, req: Request):
         """Prefill one request (whole-bucket) and splice it into `lane`."""
         self._ensure_state()
@@ -435,13 +582,73 @@ class ServeLoop:
             logits, fresh = self._prefill_one(
                 self.params, jnp.asarray(padded),
                 jnp.asarray(len(req.prompt), jnp.int32))
+        self.counters["prefill_dispatches"] += 1
         self._splice(lane, req, logits, fresh, bucket=bucket)
+
+    def _sample_key(self):
+        """Fresh subkey for an admission seed when sampling; when greedy
+        the key is passed through untouched (and unused in-device), so
+        the greedy stream stays bitwise-identical to pre-sampling code."""
+        if self.temperature <= 0:
+            return self._key
+        self._key, sub = jax.random.split(self._key)
+        return sub
 
     def _splice(self, lane: int, req: Request, logits, fresh,
                 bucket: int, prefill_chunks: int = 1):
         """Insert a freshly prefilled batch-1 state into a free lane."""
-        self.state, self.tok = _admit_fn()(self.state, self.tok, lane,
-                                           fresh, logits)
+        self.state, self.tok = _admit_fn(self.temperature, self.top_k)(
+            self.state, self.tok, lane, fresh, logits, self._sample_key())
+        self.counters["admit_dispatches"] += 1
+        self._register_admit(lane, req, bucket=bucket,
+                             prefill_chunks=prefill_chunks)
+
+    def _admit_group(self, lanes: List[int], group: List[Request]):
+        """Admit G same-bucket requests with ONE batched prefill dispatch
+        and ONE multi-lane splice. The token batch is padded UP to the
+        next power-of-two row count (duplicating row 0, a well-formed
+        real prompt) so the prefill jit cache holds at most
+        log2(lanes)+1 group programs per bucket while small groups on
+        wide-lane engines don't pay a full lanes-row prefill; the
+        splice's source map drops the surplus rows. Bit-identical to
+        admitting the same requests sequentially via `_admit_lane`."""
+        self._ensure_state()
+        padded = [self._padded_prompt(r)[0] for r in group]
+        bucket = len(padded[0])
+        g = len(group)
+        gp = min(1 << (g - 1).bit_length(), self.lanes)      # pow2 rows
+        rows = np.stack(padded)                              # [G, W]
+        lengths = np.fromiter((len(r.prompt) for r in group), np.int32, g)
+        if g < gp:
+            pad_rows = np.broadcast_to(rows[:1], (gp - g, bucket))
+            rows = np.concatenate([rows, pad_rows], axis=0)
+            lengths = np.concatenate(
+                [lengths, np.full(gp - g, lengths[0], np.int32)])
+        src = np.full(self.lanes, -1, np.int32)
+        for i, lane in enumerate(lanes):
+            src[lane] = i
+        if self.buckets is None:               # exact-width group
+            self._prefill_shapes.add(("group-exact", bucket, gp))
+            logits, fresh = self._prefill_group(self.params,
+                                                jnp.asarray(rows))
+        else:
+            self._prefill_shapes.add(("group", bucket, gp))
+            logits, fresh = self._prefill_group(self.params,
+                                                jnp.asarray(rows),
+                                                jnp.asarray(lengths))
+        self.counters["prefill_dispatches"] += 1
+        self.state, self.tok = _admit_group_fn(self.temperature, self.top_k)(
+            self.state, self.tok, jnp.asarray(src), fresh, logits,
+            self._sample_key())
+        self.counters["admit_dispatches"] += 1
+        self.counters["grouped_admissions"] += 1
+        self.counters["grouped_requests"] += g
+        for lane, req in zip(lanes, group):
+            self._register_admit(lane, req, bucket=bucket, group_size=g)
+
+    def _register_admit(self, lane: int, req: Request, bucket: int,
+                        prefill_chunks: int = 1, group_size: int = 1):
+        """Host-side bookkeeping for a request just spliced into `lane`."""
         self.active[lane] = req.max_new > 0
         self.remaining[lane] = max(req.max_new, 0)
         self.outputs[lane] = []
@@ -451,6 +658,9 @@ class ServeLoop:
         st.t_admit = self._now()
         st.bucket = bucket
         st.prefill_chunks = prefill_chunks
+        st.admit_seq = self._admit_seq
+        st.group_size = group_size
+        self._admit_seq += 1
         if req.max_new <= 0:                   # prefill-only request
             st.t_first = st.t_admit            # ttft == prefill completion
             self._finish_lane(lane, self._now())
@@ -497,42 +707,103 @@ class ServeLoop:
         p.x_last, p.pstate = self._chunk(self.params, p.pstate, tok_c,
                                          jnp.asarray(ci * c, jnp.int32),
                                          length)
+        self.counters["chunk_dispatches"] += 1
         p.next_chunk += 1
         if p.next_chunk >= p.n_chunks:
             logits, fresh = self._finalize(
                 self.params, p.pstate, p.x_last,
                 jnp.asarray((p.n_chunks - 1) * c, jnp.int32), length)
+            self.counters["prefill_dispatches"] += 1
             self._pending = None
             self._splice(p.lane, p.req, logits[0], fresh, bucket=p.bucket,
                          prefill_chunks=p.n_chunks)
         return True
 
     def schedule(self) -> int:
-        """Admit queued, already-arrived requests into free lanes. Long
-        prompts (bucket > chunk_prefill) open a time-sliced prefill on a
-        reserved lane instead of blocking on a whole-prompt dispatch; at
-        most one sliced prefill is in flight at a time."""
+        """Admit queued, already-arrived requests into free lanes.
+
+        Grouped admission (default): each round gathers up to
+        len(free_lanes) arrived requests that pad to one shared bucket
+        and admits them with a single batched prefill + multi-lane
+        splice. The target bucket is the FIFO head's off load; under
+        load (more arrived requests than free lanes) it is the SHORTEST
+        bucket present, so short prompts are not starved behind long
+        ones — bounded by AGING: after the FIFO head has been passed
+        over `max_head_skips` rounds in a row, its bucket is forced, so
+        a long prompt can never starve indefinitely under sustained
+        short-prompt overload. Requests sharing a bucket keep FIFO order
+        within it. Long prompts (bucket > chunk_prefill) open a
+        time-sliced prefill on a reserved lane instead of blocking on a
+        whole-prompt dispatch; at most one sliced prefill is in flight
+        at a time — while one is, a chunk-needing target falls back to
+        the shortest chunk-free bucket (aging credit untouched) so free
+        lanes never idle behind the sliced prefill."""
         n = 0
-        now = self._now()
         while self.queue:
+            now = self._now()
             if self.queue[0].arrival > now:
                 break
-            free = [lane for lane in np.flatnonzero(~self.active)
+            free = [int(lane) for lane in np.flatnonzero(~self.active)
                     if self._pending is None
-                    or lane != self._pending.lane]
+                    or int(lane) != self._pending.lane]
             if not free:
                 break
-            req = self.queue[0]
-            padded, bucket = self._padded_prompt(req)
-            if self._needs_chunking(bucket):
+            arrived: List[Request] = []
+            for r in self.queue:               # arrival-ordered prefix
+                if r.arrival > now:
+                    break
+                arrived.append(r)
+            if not self.group_admit:
+                group = [arrived[0]]
+            else:
+                if len(arrived) > len(free):   # under load: shortest first
+                    target = min(r.bucket for r in arrived)
+                    if (target != arrived[0].bucket
+                            and self._head_skips >= self.max_head_skips):
+                        target = arrived[0].bucket     # aging kicks in
+                else:                          # off load: FIFO head
+                    target = arrived[0].bucket
+                group = [r for r in arrived
+                         if r.bucket == target][:len(free)]
+            if (self.group_admit and self._pending is not None
+                    and self._needs_chunking(group[0].bucket)):
+                # one sliced prefill at a time — instead of idling the
+                # free lanes behind it, admit the shortest chunk-free
+                # bucket this round; the head's aging credit is NOT
+                # touched on a blocked round, so the max_head_skips
+                # bound keeps holding
+                alts = [r for r in arrived
+                        if not self._needs_chunking(r.bucket)]
+                if not alts:
+                    break
+                target = min(r.bucket for r in alts)
+                group = [r for r in alts
+                         if r.bucket == target][:len(free)]
+            head = group[0]
+            if self._needs_chunking(head.bucket):
                 if self._pending is not None:
                     break                      # one sliced prefill at a time
-                self.queue.popleft()
-                self._start_chunked(int(free[0]), req, padded, bucket)
+                # aging accounting: `in`/`is` are identity comparisons
+                # (Request eq=False); only rounds that ADMIT something
+                # consume or earn credit
+                self._head_skips = (0 if arrived[0] is head
+                                    else self._head_skips + 1)
+                self.queue.remove(head)
+                self._start_chunked(free[0], head,
+                                    self._padded_prompt(head)[0],
+                                    head.bucket)
+                continue
+            self._head_skips = (0 if arrived[0] in group
+                                else self._head_skips + 1)
+            if len(group) == 1:
+                self.queue.remove(head)
+                self._admit_lane(free[0], head)
             else:
-                self.queue.popleft()
-                self._admit_lane(int(free[0]), req)
-                n += 1
+                picked = set(map(id, group))   # one O(queue) rebuild,
+                self.queue = deque(            # not O(queue) per member
+                    r for r in self.queue if id(r) not in picked)
+                self._admit_group(free[:len(group)], group)
+            n += len(group)
         return n
 
     def admit(self, prompts: np.ndarray):
@@ -543,7 +814,11 @@ class ServeLoop:
             self._t0 = time.monotonic()
         batch = {"tokens": jnp.asarray(prompts)}
         logits, self.state = self._prefill(self.params, batch)
-        self.tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        self.counters["prefill_dispatches"] += 1
+        # same next-token rule as lane admission: sampling (when enabled)
+        # covers the first generated token on this path too
+        self.tok = _next_token(logits, self._sample_key(), self.temperature,
+                               self.top_k).astype(jnp.int32)
         self.active[:] = self.max_new > 0
         self.remaining[:] = max(self.max_new, 0)
         self.outputs = [[] for _ in range(self.lanes)]
@@ -571,11 +846,14 @@ class ServeLoop:
         steps = steps or self.block
         if self.state is None or not self.active.any():
             return bool(self.active.any())
-        fn = _masked_block_fn(_model_key(self.model), steps, self.eos)
+        fn = _masked_block_fn(_model_key(self.model), steps,
+                              self.temperature, self.top_k)
         was_active = self.active.copy()
-        self.state, self.tok, active, rem, toks, emitted = fn(
+        self.state, self.tok, active, rem, self._key, toks, emitted = fn(
             self.params, self.state, self.tok,
-            jnp.asarray(self.active), jnp.asarray(self.remaining))
+            jnp.asarray(self.active), jnp.asarray(self.remaining),
+            jnp.asarray(self.eos, jnp.int32), self._key)
+        self.counters["decode_blocks"] += 1
         host_toks = np.asarray(toks)                       # [steps, lanes]
         host_emit = np.asarray(emitted)                    # [steps, lanes]
         self.active = np.asarray(active).copy()
@@ -648,25 +926,28 @@ class ServeLoop:
         entry points (shared across ServeLoops of functionally identical
         models — the actual number of compiled XLA programs)."""
         jit_cache = sum(fn._cache_size()
-                        for fn in (self._prefill_one, self._chunk,
-                                   self._finalize)
+                        for fn in (self._prefill_one, self._prefill_group,
+                                   self._chunk, self._finalize)
                         if hasattr(fn, "_cache_size"))
         return {"loop_shapes": len(self._prefill_shapes),
                 "jit_cache": int(jit_cache)}
 
     def aggregate(self) -> Dict[str, float]:
-        """Serving metrics over completed requests."""
+        """Serving metrics over completed requests (+ dispatch counters)."""
+        counters = {k: float(v) for k, v in self.counters.items()}
         if not self.completed:
             return {"requests": 0.0, "tokens": 0.0, "wall_s": 0.0,
                     "tokens_per_s": 0.0, "mean_latency_s": 0.0,
                     "mean_occupancy": 0.0, "p50_ttft_s": 0.0,
-                    "p99_ttft_s": 0.0, "prefill_programs": 0.0}
+                    "p99_ttft_s": 0.0, "prefill_programs": 0.0,
+                    **counters}
         toks = sum(len(s.tokens) for s in self.completed)
         t_end = max(s.t_done for s in self.completed)
         t_begin = min(s.t_arrival for s in self.completed)
         wall = max(t_end - t_begin, 1e-9)
         ttfts = [s.ttft for s in self.completed]
         return {
+            **counters,
             "requests": float(len(self.completed)),
             "tokens": float(toks),
             "wall_s": wall,
@@ -703,6 +984,15 @@ def main(argv=None):
     ap.add_argument("--no-buckets", action="store_true",
                     help="legacy exact-length prefills (one compile per "
                          "distinct prompt length)")
+    ap.add_argument("--sequential-admit", action="store_true",
+                    help="disable grouped admission (one prefill + splice "
+                         "dispatch per request; --serve only)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature for the scanned decode "
+                         "block (0 = greedy; --serve only)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="truncate sampling to the k most likely tokens "
+                         "(0 = full distribution; --serve only)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -727,7 +1017,9 @@ def main(argv=None):
         loop = ServeLoop(model, params, lanes=args.batch,
                          max_new=args.new_tokens, block=8,
                          buckets=None if args.no_buckets else "auto",
-                         chunk_prefill=args.chunk_prefill)
+                         chunk_prefill=args.chunk_prefill,
+                         group_admit=not args.sequential_admit,
+                         temperature=args.temperature, top_k=args.top_k)
         lens = (args.prompt_len, max(8, args.prompt_len // 2),
                 max(8, args.prompt_len - 7), max(8, args.prompt_len // 3))
         for i in range(2 * args.batch):
@@ -746,7 +1038,10 @@ def main(argv=None):
               f"served {len(stats)} reqs on {args.batch} lanes in {dt:.2f}s "
               f"({agg['tokens_per_s']:.1f} tok/s, "
               f"p99_ttft={agg['p99_ttft_s']:.2f}s, "
-              f"{loop.prefill_programs()['loop_shapes']} prefill shapes)")
+              f"{loop.prefill_programs()['loop_shapes']} prefill shapes, "
+              f"{loop.counters['prefill_dispatches']} prefill + "
+              f"{loop.counters['admit_dispatches']} admit dispatches, "
+              f"{loop.counters['grouped_requests']} reqs group-admitted)")
         return
 
     prompts = rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len))

@@ -89,6 +89,32 @@ def lane_insert(state: DecodeState, lane, fresh: DecodeState) -> DecodeState:
                        cross=jax.tree.map(ins, state.cross, fresh.cross))
 
 
+def lanes_insert(state: DecodeState, src, fresh: DecodeState) -> DecodeState:
+    """Multi-lane splice: scatter rows of a batch-G `fresh` DecodeState
+    (e.g. from `Model.prefill_group`) into a live batched state in ONE
+    vectorized pass over the whole pytree — every `KVCache` field
+    (including the quantized mirrors/scales and accumulated scores), SSM
+    recurrent state, and enc-dec cross K/V.
+
+    `src` is an int32 [B_live] map from live lane to `fresh` row: lane b
+    takes `fresh` row `src[b]` when `src[b] >= 0` and keeps its current
+    contents at -1 — so one compiled program covers every group size.
+    Bit-identical to applying `lane_insert` once per mapped lane."""
+    src = jnp.asarray(src, jnp.int32)
+    keep = src < 0
+    idx = jnp.maximum(src, 0)
+
+    def ins(a, f):
+        g = jnp.take(f.astype(a.dtype), idx, axis=1)
+        m = keep.reshape((1, -1) + (1,) * (a.ndim - 2))
+        return jnp.where(m, a, g)
+
+    kv = (kvcache.lanes_insert(state.kv, src, fresh.kv, batch_axis=1)
+          if state.kv is not None else None)
+    return DecodeState(kv=kv, ssm=jax.tree.map(ins, state.ssm, fresh.ssm),
+                       cross=jax.tree.map(ins, state.cross, fresh.cross))
+
+
 def lane_select(active: jax.Array, new: DecodeState,
                 old: DecodeState) -> DecodeState:
     """Per-lane merge: lanes where `active` ([B] bool) take `new`, the rest
@@ -627,6 +653,26 @@ class Model:
             batch["length"] = jnp.asarray(length, jnp.int32).reshape(1)
         logits, state = self.prefill(params, batch)
         return logits[0], state
+
+    def prefill_group(self, params, tokens,
+                      lengths=None) -> Tuple[jax.Array, DecodeState]:
+        """Batched admission prefill: G requests padded to one shared
+        bucket in a single dispatch. tokens: [G, W]; lengths: [G] true
+        prompt lengths (optional — omit for exact-width prompts). Returns
+        (logits [G, V], batch-G DecodeState) ready for `lanes_insert`
+        into a live batched state.
+
+        Per-lane math is exactly `prefill`'s (prompts never attend across
+        the batch axis), so each row is bit-identical to what `prefill_one`
+        would produce for it alone — grouped admission is a pure dispatch-
+        count optimization. Serving engines pad the group to a fixed row
+        count (duplicating a real row) so one compiled program per bucket
+        serves every group size; surplus rows are discarded by the
+        `lanes_insert` source map."""
+        batch = {"tokens": jnp.asarray(tokens)}
+        if lengths is not None:
+            batch["length"] = jnp.asarray(lengths, jnp.int32)
+        return self.prefill(params, batch)
 
     def supports_bucketed_prefill(self) -> bool:
         """True-length-masked (right-padded) prefill needs the prompt pass

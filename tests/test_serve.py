@@ -69,6 +69,35 @@ def test_cache_lane_helpers_roundtrip(kv_dtype):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
 
 
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8"])
+def test_lanes_insert_multi_lane_roundtrip(kv_dtype):
+    """One vectorized `lanes_insert` must equal sequential `lane_insert`
+    calls for EVERY cache field (incl. quantized mirrors/scales and the
+    accumulated scores), and -1 source-map entries must leave their lane
+    untouched."""
+    prune = dataclasses.replace(PRUNE, kv_dtype=kv_dtype)
+    b, hk, d = 4, 2, 8
+    key = jax.random.PRNGKey(0)
+    live = kvcache.init_cache(b, hk, d, prune.slots, prune, jnp.float32)
+    fresh = kvcache.init_cache(3, hk, d, prune.slots, prune, jnp.float32)
+    for i in range(6):
+        k, v = jax.random.normal(jax.random.fold_in(key, i), (2, b, hk, d))
+        live = kvcache.write_token(live, k, v, prune)
+        k2, v2 = jax.random.normal(jax.random.fold_in(key, 100 + i),
+                                   (2, 3, hk, d))
+        fresh = kvcache.write_token(fresh, k2, v2, prune)
+    # lanes 3, 0, 1 take fresh rows 0, 1, 2; lane 2 keeps its contents
+    src = np.array([1, 2, -1, 0], np.int32)
+    got = kvcache.lanes_insert(live, src, fresh)
+    want = live
+    for lane, row in ((3, 0), (0, 1), (1, 2)):
+        want = kvcache.lane_insert(want, lane, kvcache.lane_slice(fresh, row))
+    for name, a, b_ in zip(got._fields, got, want):
+        if a is not None:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b_),
+                                          err_msg=name)
+
+
 # -- lane-inserted prefill parity --------------------------------------------
 
 
@@ -269,9 +298,13 @@ def test_bucketed_prefill_parity(kv_dtype):
 
 
 def test_bucketed_prefill_bounds_compiles(setup):
-    """ISSUE acceptance: serving >= 8 distinct prompt lengths compiles at
-    most len(buckets) prefill programs (jit cache-miss counter), and the
-    generated tokens match the exact-length (unbucketed) engine."""
+    """ISSUE acceptance: serving >= 8 distinct prompt lengths compiles a
+    bounded number of prefill programs — at most 1 + log2(lanes) per
+    bucket (one batch-1 single-admission program + one per power-of-two
+    group size; == 2/bucket at lanes=2; which buckets use which depends
+    only on scheduling, never on how many distinct lengths the traffic
+    carries) — and the generated tokens match the exact-length
+    (unbucketed) engine."""
     cfg, _, _ = setup
     # fresh Prune/Model identity → fresh process-wide jit caches, so the
     # cache-size counter below counts only THIS test's compiles
@@ -290,8 +323,8 @@ def test_bucketed_prefill_bounds_compiles(setup):
         rids_e.append(exact.submit(prompt, max_new=3))
     done = {s.rid: s for s in loop.run()}
     programs = loop.prefill_programs()
-    assert programs["jit_cache"] <= len(buckets)
-    assert programs["loop_shapes"] <= len(buckets)
+    assert programs["jit_cache"] <= 2 * len(buckets)
+    assert programs["loop_shapes"] <= 2 * len(buckets)
     assert {done[r].bucket for r in rids} == {16, 32, 64}
     # the exact-length engine compiles one program per distinct length...
     done_e = {s.rid: s for s in exact.run()}
@@ -299,6 +332,176 @@ def test_bucketed_prefill_bounds_compiles(setup):
     # ...and bucketing changes nothing the user can see
     for r, re_ in zip(rids, rids_e):
         assert done[r].tokens == done_e[re_].tokens
+
+
+# -- grouped admission --------------------------------------------------------
+
+
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8"])
+def test_grouped_admission_bitwise_parity(kv_dtype):
+    """ISSUE acceptance: one `prefill_group` + `lanes_insert` dispatch
+    must be BIT-identical to admitting the same requests sequentially via
+    `prefill_one` + `lane_insert` — logits, seeded tokens, and every
+    cache field — including when the group is padded with a duplicate row
+    (G < lanes) whose output is discarded."""
+    cfg = reduced(get_config("granite-3-2b"))
+    prune = dataclasses.replace(PRUNE, kv_dtype=kv_dtype)
+    model = Model(cfg, prune)
+    params = model.init(jax.random.PRNGKey(0))
+    lanes, bucket = 4, 64
+    lens = [40, 37, 8]                 # G=3 < lanes → one padded dummy row
+    prompts = [_prompt(cfg, t, seed=90 + i) for i, t in enumerate(lens)]
+    rows = np.zeros((lanes, bucket), np.int64)
+    for i, p in enumerate(prompts):
+        rows[i, :len(p)] = p
+    rows[3, :lens[0]] = prompts[0]     # duplicate row 0, as ServeLoop pads
+    lengths = np.array(lens + [lens[0]], np.int32)
+
+    lg_g, fresh = jax.jit(model.prefill_group)(params, jnp.asarray(rows),
+                                               jnp.asarray(lengths))
+    src = np.array([-1, 0, 2, 1], np.int32)   # lanes 1,3,2 take rows 0,1,2
+    state_g = T.lanes_insert(model.init_decode_state(lanes),
+                             jnp.asarray(src), fresh)
+
+    prefill_one = jax.jit(model.prefill_one)
+    state_s = model.init_decode_state(lanes)
+    for lane, row in ((1, 0), (3, 1), (2, 2)):
+        lg1, one = prefill_one(params, jnp.asarray(rows[row]),
+                               jnp.asarray(lengths[row]))
+        state_s = T.lane_insert(state_s, lane, one)
+        np.testing.assert_array_equal(np.asarray(lg1), np.asarray(lg_g[row]))
+    for name, a, b in zip(state_g.kv._fields, state_g.kv, state_s.kv):
+        if a is not None:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=name)
+
+
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8"])
+def test_grouped_vs_sequential_engine_parity(kv_dtype):
+    """End-to-end: a bursty same-bucket arrival set served with grouped
+    admission produces exactly the sequential engine's tokens, with
+    strictly fewer prefill and admit dispatches."""
+    cfg = reduced(get_config("granite-3-2b"))
+    prune = dataclasses.replace(PRUNE, kv_dtype=kv_dtype)
+    model = Model(cfg, prune)
+    params = model.init(jax.random.PRNGKey(0))
+    # equal budgets → paired lanes always free together, so the dispatch
+    # count below is deterministic (unequal budgets still group, but a
+    # lone freed lane refills solo mid-flight)
+    reqs = [(40, 4), (37, 4), (33, 4), (38, 4), (36, 4), (35, 4)]
+    grouped = ServeLoop(model, params, lanes=2, eos=-1, block=2)
+    seq = ServeLoop(model, params, lanes=2, eos=-1, block=2,
+                    group_admit=False)
+    rid_g, rid_s = [], []
+    for i, (t, mn) in enumerate(reqs):
+        prompt = _prompt(cfg, t, seed=40 + i)
+        rid_g.append(grouped.submit(prompt, max_new=mn))
+        rid_s.append(seq.submit(prompt, max_new=mn))
+    done_g = {s.rid: s for s in grouped.run()}
+    done_s = {s.rid: s for s in seq.run()}
+    for rg, rs in zip(rid_g, rid_s):
+        assert done_g[rg].tokens == done_s[rs].tokens
+    # all six pad to bucket 64 → admitted in pairs: 3 dispatches, not 6
+    assert grouped.counters["prefill_dispatches"] == 3
+    assert grouped.counters["admit_dispatches"] == 3
+    assert grouped.counters["grouped_requests"] == 6
+    assert seq.counters["prefill_dispatches"] == 6
+    assert seq.counters["admit_dispatches"] == 6
+    assert seq.counters["grouped_admissions"] == 0
+    assert all(done_g[r].group_size == 2 for r in rid_g)
+
+
+def test_shortest_bucket_first_under_load(setup):
+    """With more arrived requests than free lanes, admission picks the
+    shortest bucket present — a burst of short prompts is not starved
+    behind a long head-of-queue arrival; FIFO order holds within a
+    bucket and off load."""
+    cfg, model, params = setup
+    loop = ServeLoop(model, params, lanes=2, eos=-1, block=2)
+    rid_long = [loop.submit(_prompt(cfg, 60, seed=1), max_new=2),
+                loop.submit(_prompt(cfg, 58, seed=2), max_new=2)]
+    rid_short = [loop.submit(_prompt(cfg, 10, seed=3), max_new=2),
+                 loop.submit(_prompt(cfg, 12, seed=4), max_new=2)]
+    done = {s.rid: s for s in loop.run()}
+    short_seq = [done[r].admit_seq for r in rid_short]
+    long_seq = [done[r].admit_seq for r in rid_long]
+    assert max(short_seq) < min(long_seq)     # shorts admitted first
+    assert short_seq == sorted(short_seq)     # FIFO within the bucket
+    assert long_seq == sorted(long_seq)
+    assert all(done[r].bucket == 16 for r in rid_short)
+    assert all(done[r].bucket == 64 for r in rid_long)
+
+
+def test_shortest_bucket_aging_prevents_starvation(setup):
+    """Sustained short-prompt overload must not starve a long request
+    forever: after `max_head_skips` passed-over rounds the FIFO head's
+    bucket is forced."""
+    cfg, model, params = setup
+    loop = ServeLoop(model, params, lanes=2, eos=-1, block=2,
+                     max_head_skips=2)
+    rid_long = loop.submit(_prompt(cfg, 60, seed=1), max_new=2)
+    rid_short = [loop.submit(_prompt(cfg, 10 + i % 3, seed=2 + i),
+                             max_new=2) for i in range(12)]
+    done = {s.rid: s for s in loop.run()}
+    # head skipped at most max_head_skips rounds of <=2 admissions each,
+    # then forced: the long prompt is admitted well before the shorts
+    # drain (seq 0..12; without aging it would be seq 12)
+    assert done[rid_long].admit_seq <= 2 * 2 + 1
+    assert len(done[rid_long].tokens) == 2
+
+
+def test_chunk_blocked_round_admits_short_and_keeps_aging(setup):
+    """While a sliced prefill is in flight, a chunk-needing target must
+    not idle the remaining free lanes: the round falls back to the
+    shortest chunk-free bucket, and the blocked head's aging credit is
+    left untouched (the starvation bound cannot be reset by a round that
+    admits nothing for the head)."""
+    cfg, model, params = setup
+    loop = ServeLoop(model, params, lanes=2, eos=-1, block=2,
+                     chunk_prefill=16, max_head_skips=0)
+    rid_l1 = loop.submit(_prompt(cfg, 57, seed=1), max_new=2)
+    rid_l2 = loop.submit(_prompt(cfg, 60, seed=2), max_new=2)
+    rid_s = loop.submit(_prompt(cfg, 10, seed=3), max_new=2)
+    done = {s.rid: s for s in loop.run()}
+    # the short rode a lane while long2 sat behind long1's sliced prefill
+    assert done[rid_s].admit_seq < done[rid_l2].admit_seq
+    for rid in (rid_l1, rid_l2, rid_s):
+        assert len(done[rid].tokens) == 2
+    assert done[rid_l1].prefill_chunks == 4      # ceil(57/16)
+    assert done[rid_l2].prefill_chunks == 4      # ceil(60/16)
+    assert loop._pending is None and not loop.active.any()
+
+
+def test_first_token_sampling_seed_sensitivity(setup):
+    """The admission dispatch must SAMPLE the first generated token when
+    temperature > 0 (it used to argmax unconditionally): across seeds,
+    a max_new=1 request yields more than one distinct token, and each
+    seed is reproducible."""
+    cfg, model, params = setup
+    prompt = _prompt(cfg, 24, seed=5)
+    def first_tok(seed):
+        loop = ServeLoop(model, params, lanes=2, eos=-1, block=1,
+                         temperature=2.0, sample_seed=seed)
+        rid = loop.submit(prompt, max_new=1)
+        return {s.rid: s.tokens for s in loop.run()}[rid]
+    toks = [first_tok(s)[0] for s in range(6)]
+    assert len(set(toks)) > 1          # not silently greedy
+    assert first_tok(3) == [toks[3]]   # reproducible per seed
+
+
+def test_grouped_admission_partial_free_lanes(setup):
+    """A group larger than the free-lane count is split: the first
+    len(free) members go in one dispatch, the rest wait for lanes."""
+    cfg, model, params = setup
+    loop = ServeLoop(model, params, lanes=2, eos=-1, block=2)
+    rids = [loop.submit(_prompt(cfg, 20 + i, seed=i), max_new=2)
+            for i in range(5)]                # all bucket 32
+    done = {s.rid: s for s in loop.run()}
+    assert [done[r].admit_seq for r in rids] == list(range(5))
+    assert loop.counters["prefill_dispatches"] == 3    # 2 + 2 + 1
+    assert loop.counters["grouped_requests"] == 4
+    for r in rids:
+        assert len(done[r].tokens) == 2
 
 
 def test_chunked_prefill_admission(setup):
@@ -410,6 +613,83 @@ def test_chunked_prefill_ragged_bucket_uses_rounded_workspace(setup):
     assert done_s.tokens == out_w
     assert done_s.prefill_chunks == 4          # ceil(57/16)
     assert ("chunk", 16, 64) in sliced._prefill_shapes
+
+
+def test_runtime_eos_block_parity_and_shared_program(setup):
+    """The masked decode block is keyed on `steps` only: a RUNTIME eos
+    must reproduce the statically-baked-eos program bit for bit, and two
+    engines with different eos ids must share ONE compiled block."""
+    import functools
+    from repro.launch.serve import (_masked_block_fn, _model_key,
+                                    decode_block_masked)
+    cfg, model, params = setup
+    prompts = np.stack([_prompt(cfg, 24, seed=s) for s in range(2)])
+    logits, state0 = jax.jit(model.prefill)(params,
+                                            {"tokens": jnp.asarray(prompts)})
+    tok0 = jnp.argmax(logits, -1).astype(jnp.int32)
+    active = jnp.ones(2, bool)
+    rem = jnp.full(2, 8, jnp.int32)
+    key = jax.random.PRNGKey(0)
+
+    def snap():
+        # the block fn donates its carry on non-CPU backends — hand each
+        # call its own copy so the test stays portable
+        return (jax.tree.map(jnp.copy, state0), jnp.copy(tok0),
+                jnp.copy(active), jnp.copy(rem), jnp.copy(key))
+
+    # greedy reference to learn a token id that actually appears
+    fn = _masked_block_fn(_model_key(model), 8)
+    st, tk, ac, rm, ky = snap()
+    *_, toks_ref, emit_ref = fn(params, st, tk, ac, rm,
+                                jnp.asarray(-1, jnp.int32), ky)
+    eos = int(np.asarray(toks_ref)[3, 0])
+    # statically-baked eos oracle (the pre-refactor formulation)
+    static = jax.jit(functools.partial(decode_block_masked, model,
+                                       eos=eos, steps=8))
+    st, tk, ac, rm, ky = snap()
+    *_, toks_s, emit_s = static(params, st, tk, ac, rm, key=ky)
+    st, tk, ac, rm, ky = snap()
+    *_, toks_r, emit_r = fn(params, st, tk, ac, rm,
+                            jnp.asarray(eos, jnp.int32), ky)
+    np.testing.assert_array_equal(np.asarray(toks_r), np.asarray(toks_s))
+    np.testing.assert_array_equal(np.asarray(emit_r), np.asarray(emit_s))
+    # every (steps, eos) combination maps onto the same compiled program
+    assert _masked_block_fn(_model_key(model), 8) is fn
+    loop_a = ServeLoop(model, params, lanes=2, eos=5, block=8)
+    loop_b = ServeLoop(model, params, lanes=2, eos=7, block=8)
+    fa = _masked_block_fn(_model_key(loop_a.model), 8, loop_a.temperature,
+                          loop_a.top_k)
+    fb = _masked_block_fn(_model_key(loop_b.model), 8, loop_b.temperature,
+                          loop_b.top_k)
+    assert fa is fb
+
+
+def test_scanned_sampling_temperature_topk(setup):
+    """temperature/top_k sampling in the scanned decode block: budgets
+    are honoured, the stream is reproducible under a fixed seed, and the
+    greedy default is unaffected."""
+    cfg, model, params = setup
+    def serve(temperature, top_k, seed=0):
+        loop = ServeLoop(model, params, lanes=2, eos=-1, block=4,
+                         temperature=temperature, top_k=top_k,
+                         sample_seed=seed)
+        rids = [loop.submit(_prompt(cfg, 24, seed=11), max_new=6),
+                loop.submit(_prompt(cfg, 30, seed=12), max_new=4)]
+        done = {s.rid: s for s in loop.run()}
+        return [done[r].tokens for r in rids]
+    t1 = serve(1.0, 5)
+    t2 = serve(1.0, 5)
+    assert t1 == t2                            # same seed → same stream
+    assert [len(t) for t in t1] == [6, 4]      # budgets honoured
+    assert serve(1.0, 5, seed=9) != t1         # a new seed moves the stream
+    greedy = serve(0.0, 0)
+    ref_loop = ServeLoop(model, params, lanes=2, eos=-1, block=4)
+    r1 = ref_loop.submit(_prompt(cfg, 24, seed=11), max_new=6)
+    r2 = ref_loop.submit(_prompt(cfg, 30, seed=12), max_new=4)
+    done = {s.rid: s.tokens for s in ref_loop.run()}
+    assert greedy == [done[r1], done[r2]]
+    # top_k=1 with any temperature degenerates to greedy
+    assert serve(0.7, 1) == greedy
 
 
 def test_greedy_generate_sampling_default_key(setup):
