@@ -1,9 +1,12 @@
-"""Paper Fig. 12 — decode latency. Three views:
+"""Paper Fig. 12 — decode latency. Four views:
   * measured CPU wall-time per decode attention step (dense vs UniCAIM
     composed vs the fused single-pass engine) at growing context — the
     paper's 'delay' with real code;
   * scan-amortized step time: 32 decode steps in one lax.scan dispatch,
     the serving path's per-token cost without Python dispatch overhead;
+  * fill sweep: windowed decode at slots=4096 with fill ∈ {128, 512,
+    2048, 4096} — step latency must GROW with the live context instead
+    of sitting flat at the slots ceiling (the tentpole claim);
   * derived v5e roofline latency (memory term dominates decode).
 The paper's ADC-count serialization has no TPU analog (DESIGN.md §7)."""
 from __future__ import annotations
@@ -15,13 +18,16 @@ import jax.numpy as jnp
 
 from benchmarks import common
 from benchmarks.common import emit, time_fn
-from repro.core import baselines
-from repro.core.attention import decode_attention
-from repro.core.cache import init_cache
+from repro.core import baselines, quant
+from repro.core.attention import (decode_attention, fused_auto_decision,
+                                  windowed_decode_attention)
+from repro.core.cache import decode_window, init_cache
 from repro.launch.roofline import HBM_BW
 
 B, HK, HQ, D = 2, 4, 8, 64
 SCAN_STEPS = 32
+SWEEP_SLOTS = 4096
+SWEEP_FILLS = (128, 512, 2048, 4096)
 
 
 def _step_fn(prune):
@@ -35,6 +41,55 @@ def _scan_fn(prune):
             return c, o
         return jax.lax.scan(body, cache, None, length=SCAN_STEPS)
     return jax.jit(run)
+
+
+def _filled_cache(fill: int, slots: int, prune, key=0):
+    """Cache with `fill` live slots in the [0, fill) prefix — exactly the
+    layout prefill + append-only decode produce (bench shortcut: the
+    contents are random, the metadata is faithful)."""
+    ks = jax.random.split(jax.random.PRNGKey(key), 3)
+    c = init_cache(B, HK, D, slots, prune, jnp.float32)
+    k = jax.random.normal(ks[0], (B, HK, slots, D))
+    v = jax.random.normal(ks[1], (B, HK, slots, D))
+    live = jnp.broadcast_to(jnp.arange(slots)[None, None, :] < fill,
+                            (B, HK, slots))
+    kq, kscale = quant.quantize(k, prune.score_bits)
+    pos = jnp.broadcast_to(jnp.arange(slots)[None, None, :], (B, HK, slots))
+    return c._replace(
+        k=jnp.where(live[..., None], k, 0).astype(c.k.dtype),
+        v=jnp.where(live[..., None], v, 0).astype(c.v.dtype),
+        kq=jnp.where(live[..., None], kq, 0),
+        kscale=jnp.where(live, kscale, 0.0),
+        acc=jax.random.uniform(ks[2], (B, HK, slots)) * live,
+        valid=live, pos=jnp.where(live, pos, -1),
+        fill=jnp.full((B,), fill, jnp.int32),
+        step=jnp.full((B,), fill, jnp.int32))
+
+
+def _fill_sweep(summary):
+    """Windowed decode at slots=4096: step cost must track fill, not S."""
+    prune = baselines.unicaim(heavy=SWEEP_SLOTS - 64, reserve=64,
+                              select_k=64, score_bits=3, sink_tokens=2,
+                              recent_window=8)
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, HQ, D))
+    kn = jax.random.normal(ks[1], (B, HK, D))
+    vn = jax.random.normal(ks[2], (B, HK, D))
+    rows = {}
+    for fill in SWEEP_FILLS:
+        cache = _filled_cache(fill, SWEEP_SLOTS, prune, key=fill)
+        w = decode_window(fill, 1, SWEEP_SLOTS, prune)
+        fn = jax.jit(lambda c, q, k, v, w=w: windowed_decode_attention(
+            c, q, k, v, prune, w))
+        us = time_fn(lambda: fn(cache, q, kn, vn))
+        rows[fill] = us
+        emit(f"latency_win_fill{fill}_slots{SWEEP_SLOTS}", us,
+             f"window={w or SWEEP_SLOTS}")
+        summary[f"unicaim_win_us_fill{fill}_slots{SWEEP_SLOTS}"] = us
+    speedup = rows[SWEEP_FILLS[-1]] / rows[SWEEP_FILLS[0]]
+    emit(f"latency_win_speedup_fill{SWEEP_FILLS[0]}_vs_{SWEEP_SLOTS}", 0.0,
+         f"step_cost_ratio={speedup:.2f}x")
+    summary["win_speedup_fill128_vs_4096"] = speedup
 
 
 def run():
@@ -93,6 +148,16 @@ def run():
             f"fused_speedup_ctx{ctx}":
                 rows["unicaim"][0] / rows["fused"][0],
         })
+    # fused="auto" record: which engine auto picks on this backend and
+    # why (the acceptance gate for the fused path: either the forced
+    # measurement shows speedup >= 1.0, or auto selects composed with the
+    # decision recorded here)
+    decision = fused_auto_decision()
+    summary["fused_auto_engine"] = decision["engine"]
+    summary["fused_auto_reason"] = decision["reason"]
+    emit("latency_fused_auto", 0.0,
+         f"engine={decision['engine']};backend={decision['backend']}")
+    _fill_sweep(summary)
     # machine-readable trajectory (written to BENCH_latency.json by
     # `benchmarks/run.py --smoke`; CI compares against the committed copy)
     return summary

@@ -17,8 +17,15 @@ def set_smoke(on: bool = True) -> None:
     SMOKE = on
 
 
-def time_fn(fn, *args, warmup=2, iters=5):
-    """Median wall-time (µs) of a jitted callable."""
+def time_fn(fn, *args, warmup=2, iters=7):
+    """Min wall-time (µs) of a jitted callable.
+
+    Min, not median: shared CI runners carry multi-ms scheduling noise
+    that inflates medians by 2-3x run to run (interleaved profiling of
+    identical programs confirmed it), while the minimum tracks the
+    actual compute floor. Cross-engine ratios from medians here once
+    recorded a spurious 1.3x "regression" (see BENCH_latency.json
+    history around the fused engine)."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []
@@ -26,7 +33,7 @@ def time_fn(fn, *args, warmup=2, iters=5):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         ts.append((time.perf_counter() - t0) * 1e6)
-    return float(np.median(ts))
+    return float(np.min(ts))
 
 
 def emit(name: str, us_per_call: float, derived: str):

@@ -9,13 +9,18 @@ performance. CI runs::
         benchmarks/baselines/BENCH_serve.json BENCH_serve.json
 
 Throughput-style keys (``*tok_s*``) warn when the fresh value drops below
-``TOL`` of the baseline; count-style keys (``*compile*`` / ``*dispatch*``)
-warn when the fresh value EXCEEDS the baseline (dispatch/compile counts
-are deterministic — more of them means an admission/bucketing regression,
-not noise). Everything else is informational. The exit code is always 0:
-shared CI runners are far too noisy for a hard wall-clock gate, so this
-is a trajectory tripwire, not a merge blocker. Warnings use GitHub
-``::warning::`` annotations so they surface on the PR checks page.
+``TOL`` of the baseline; count-style keys (``*compile*`` / ``*dispatch*``
+/ ``*windows*``) warn when the fresh value EXCEEDS the baseline
+(dispatch/compile counts are deterministic — more of them means an
+admission/bucketing/windowing regression, not noise); latency-style keys
+(``*_us*``, lower is better) warn when the fresh value exceeds
+``1/TOL`` of the baseline; ratio-style keys (``*speedup*`` /
+``*reduction*``, higher is better) warn like throughput. Everything else
+— including the string-valued decision records (``fused_auto_*``) — is
+informational. The exit code is always 0: shared CI runners are far too
+noisy for a hard wall-clock gate, so this is a trajectory tripwire, not
+a merge blocker. Warnings use GitHub ``::warning::`` annotations so they
+surface on the PR checks page.
 """
 from __future__ import annotations
 
@@ -28,8 +33,12 @@ TOL = 0.7        # throughput may dip to 70% of baseline before warning
 def classify(key: str) -> str:
     if "tok_s" in key:
         return "throughput"
-    if "compile" in key or "dispatch" in key:
+    if "compile" in key or "dispatch" in key or "windows" in key:
         return "count"
+    if "speedup" in key or "reduction" in key:
+        return "ratio"
+    if "_us" in key:
+        return "latency"
     return "info"
 
 
@@ -50,6 +59,14 @@ def compare(baseline: dict, fresh: dict) -> list:
             out.append(("warning",
                         f"{key}: {cur:.0f} exceeds committed baseline "
                         f"{base:.0f} (dispatch/compile regression)"))
+        elif kind == "latency" and cur * TOL > base:
+            out.append(("warning",
+                        f"{key}: {cur:.1f}us > {1 / TOL:.2f}x committed "
+                        f"baseline {base:.1f}us (latency regression)"))
+        elif kind == "ratio" and cur < TOL * base:
+            out.append(("warning",
+                        f"{key}: {cur:.2f} < {TOL:.0%} of committed "
+                        f"baseline ratio {base:.2f}"))
         else:
             out.append(("notice", f"{key}: {base:g} -> {cur:g}"))
     for key in sorted(set(baseline) - set(fresh)):

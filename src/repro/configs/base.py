@@ -58,8 +58,13 @@ class PruneConfig:
     # --- fused single-pass decode engine (kernels/fused_decode.py):
     #     scoring, block-local selection, winner gather, and exact
     #     attention in one kernel/XLA region instead of the composed
-    #     three-pass flow. The composed path stays as the oracle. ---
-    fused: bool = False
+    #     three-pass flow. The composed path stays as the oracle.
+    #     fused="auto" picks the measured-faster engine per backend: the
+    #     Pallas kernel on TPU (where its winner-only DMA gather pays),
+    #     the composed path elsewhere (the XLA fallback was measured at
+    #     parity-to-slower off-TPU — see core/attention.fused_auto_decision,
+    #     which benches record into BENCH_latency.json). ---
+    fused: object = False        # False | True | "auto"
     fused_backend: str = "auto"  # 'auto' | 'pallas' | 'xla'
     # --- charge-domain accumulation ---
     accumulate: str = "approx"   # 'approx' (same-cycle, paper) | 'exact'
@@ -78,6 +83,7 @@ class PruneConfig:
         assert 1 <= self.score_bits <= 8
         assert 1 <= self.query_bits <= 8
         assert self.select_mode in ("topk", "threshold")
+        assert self.fused in (True, False, "auto")
         assert self.fused_backend in ("auto", "pallas", "xla")
         assert self.accumulate in ("approx", "exact")
         assert self.select_k <= self.slots

@@ -23,7 +23,8 @@ from repro.runtime.flags import xscan
 
 from repro.configs.base import PruneConfig
 from repro.core import quant, scoring, topk
-from repro.core.cache import KVCache, protected_mask, write_token
+from repro.core.cache import (KVCache, protected_mask, slot_window,
+                              slot_window_merge, write_token)
 from repro.core.topk import NEG_INF
 from repro.runtime.sharding import shard
 
@@ -206,11 +207,40 @@ def _blocked_attend_shardmap(cache: KVCache, q: jax.Array,
     return out.reshape(b, hq, -1)
 
 
+def fused_auto_decision() -> dict:
+    """How `PruneConfig(fused="auto")` resolves on this backend, with the
+    measured rationale (benches record this into BENCH_latency.json).
+
+    The fused engine's advantage is the Pallas kernel's winner-only DMA
+    gather — the unselected K/V rows never leave HBM. Off-TPU the kernel
+    lowers to the XLA fallback (`ref.fused_decode_ref`), whose gather
+    offers no such bandwidth win: interleaved min-time profiling at
+    ctx512 put it at parity-to-~6%-slower than the composed three-pass
+    path (identical FLOPs/bytes per XLA cost analysis; the historical
+    1.3x figure was sequential-median timing noise). auto therefore runs
+    fused only where the kernel is real."""
+    on_tpu = jax.default_backend() == "tpu"
+    return {
+        "engine": "fused" if on_tpu else "composed",
+        "backend": jax.default_backend(),
+        "reason": ("pallas kernel: winner-only DMA gather pays on TPU"
+                   if on_tpu else
+                   "xla fallback measured at parity-to-slower vs the "
+                   "composed path off-TPU (no DMA-gather advantage)"),
+    }
+
+
+def _fused_enabled(prune: PruneConfig) -> bool:
+    if prune.fused == "auto":
+        return fused_auto_decision()["engine"] == "fused"
+    return bool(prune.fused)
+
+
 def _fused_eligible(cache: KVCache, prune: PruneConfig) -> bool:
     """The fused engine covers the paper-default decode configuration;
     anything it doesn't (threshold race, exact accumulation, MLA latent
     caches, slot-sharded meshes) falls back to the composed oracle path."""
-    if not (prune.fused and prune.policy == "unicaim"):
+    if not (_fused_enabled(prune) and prune.policy == "unicaim"):
         return False
     if prune.select_mode != "topk" or prune.accumulate != "approx":
         return False
@@ -251,6 +281,10 @@ def _fused_decode_attend(cache: KVCache, q: jax.Array, prune: PruneConfig
     def bhf(x):                               # [B, Hk, ...] → [B·Hk, ...]
         return x.reshape((b * hk,) + x.shape[2:])
 
+    nb = max(1, prune.select_blocks)
+    # per-lane live counts drive the ragged kernel's early exit (global
+    # selection only — a block race would change per-block winner counts)
+    fills = jnp.repeat(cache.fill, hk) if nb == 1 else None
     out, probs = ops.fused_decode(
         q.reshape(b, hk, g, d).reshape(b * hk, g, d),
         qq.reshape(b, hk, g, d).reshape(b * hk, g, d),
@@ -258,11 +292,31 @@ def _fused_decode_attend(cache: KVCache, q: jax.Array, prune: PruneConfig
         bhf(mirror), bhf(cache.kscale), bhf(kscale), bhf(vscale),
         bhf(cache.valid.astype(jnp.int8)), bhf(prot.astype(jnp.int8)),
         bhf(cache.k), bhf(cache.v),
-        select_k=prune.select_k, num_blocks=max(1, prune.select_blocks),
-        backend=prune.fused_backend)
+        select_k=prune.select_k, num_blocks=nb,
+        backend=prune.fused_backend, fills=fills)
     out = out.reshape(b, hk, g, dv).reshape(b, hq, dv)
     acc = cache.acc * prune.acc_decay + probs.reshape(b, hk, s)
     return cache._replace(acc=acc), out
+
+
+def windowed_decode_attention(cache: KVCache, q: jax.Array,
+                              k_new: jax.Array, v_new: jax.Array,
+                              prune: PruneConfig, window: Optional[int],
+                              ) -> Tuple[KVCache, jax.Array]:
+    """One decode step over the `[:window]` slot prefix of the cache.
+
+    `window` is a STATIC width (the caller picks it on the host from the
+    lane fills — see `cache.decode_window`); None or >= slots runs the
+    full-width step. Because every live slot sits in the fill prefix and
+    slots >= fill are invalid (NEG_INF-scored, zero-probability,
+    zero-accumulation), the windowed step is bit-identical to the
+    full-width one while touching O(window) instead of O(slots) bytes —
+    the decode-cost-tracks-live-context contract of the paper."""
+    if window is None or window >= cache.slots:
+        return decode_attention(cache, q, k_new, v_new, prune)
+    win, out = decode_attention(slot_window(cache, window), q, k_new,
+                                v_new, prune)
+    return slot_window_merge(cache, win), out
 
 
 def decode_attention(cache: KVCache, q: jax.Array, k_new: jax.Array,

@@ -158,6 +158,92 @@ def lane_reset(cache: KVCache, lane, batch_axis: int = 0) -> KVCache:
     return lane_insert(cache, lane, empty, batch_axis=batch_axis)
 
 
+# ---------------------------------------------------------------------------
+# Slot windows — fill-aware decode cost.
+#
+# Every write path is prefix-packed: `prefill_fill` scatters the kept tokens
+# into slots [0, keep) and `write_token` appends at slot `fill` until the
+# cache is full, after which eviction re-programs a slot that is already
+# < fill. A lane with fill=f therefore has ALL its live slots inside [0, f),
+# and a decode step only ever reads/writes slots [0, max_fill + 1). Slicing
+# every slot-axis field to a prefix window W >= max_fill + steps gives a
+# shape-stable view whose decode math is bit-identical to the full-width
+# cache (slots >= fill are invalid: their scores are NEG_INF-masked, their
+# probabilities are exactly zero, and their accumulated scores are exactly
+# zero, so dropping them removes only exact-zero/masked work). The serving
+# engine quantizes W to powers of two so the jit cache gains at most
+# log2(slots) windowed programs per decode-block shape.
+#
+# Ring-wrap handling: the streaming policy's ring eviction (and unicaim/h2o
+# argmin eviction) only engages once a lane is FULL — `_choose_slot` appends
+# while fill < slots — and a full lane forces W == slots (`decode_window`
+# returns None), so a windowed program never sees a wrapped write.
+# ---------------------------------------------------------------------------
+
+
+def slot_window(cache: KVCache, w: int) -> KVCache:
+    """View of the first `w` slots of every slot-axis field.
+
+    Works on single-layer ([B, Hk, S, ·]) and layer-stacked ([L, B, Hk,
+    S, ·]) caches alike: the slot axis is located from the trailing end
+    (k/v/kq at ndim-2, the per-slot scalars at ndim-1); `fill`/`step`
+    carry no slot axis and pass through."""
+    def cut(a, ax_from_end):
+        if a is None:
+            return None
+        idx = [slice(None)] * a.ndim
+        idx[a.ndim - ax_from_end] = slice(0, w)
+        return a[tuple(idx)]
+    return KVCache(
+        k=cut(cache.k, 2), v=cut(cache.v, 2), kq=cut(cache.kq, 2),
+        kscale=cut(cache.kscale, 1), vscale=cut(cache.vscale, 1),
+        acc=cut(cache.acc, 1), valid=cut(cache.valid, 1),
+        pos=cut(cache.pos, 1), fill=cache.fill, step=cache.step)
+
+
+def slot_window_merge(full: KVCache, win: KVCache) -> KVCache:
+    """Write a windowed cache back over the first `w` slots of `full`.
+
+    Together with `slot_window` this brackets a decode step: slots beyond
+    the window were untouched by construction (invalid, zero-acc), so the
+    merged cache is bit-identical to running the step at full width."""
+    def put(a, wa, ax_from_end):
+        if a is None:
+            return None
+        ax = a.ndim - ax_from_end
+        if wa.shape[ax] == a.shape[ax]:
+            return wa
+        return jax.lax.dynamic_update_slice_in_dim(a, wa, 0, axis=ax)
+    return KVCache(
+        k=put(full.k, win.k, 2), v=put(full.v, win.v, 2),
+        kq=put(full.kq, win.kq, 2),
+        kscale=put(full.kscale, win.kscale, 1),
+        vscale=put(full.vscale, win.vscale, 1),
+        acc=put(full.acc, win.acc, 1), valid=put(full.valid, win.valid, 1),
+        pos=put(full.pos, win.pos, 1), fill=win.fill, step=win.step)
+
+
+def decode_window(max_fill: int, steps: int, slots: int,
+                  prune: PruneConfig) -> Optional[int]:
+    """Power-of-two slot window covering `steps` decode steps from
+    `max_fill`, or None when only the full width is valid.
+
+    The window must hold every live slot plus the `steps` about-to-append
+    tokens, and stay wide enough for the selection machinery: at least
+    `select_k` slots so top-k never exceeds the axis, and a multiple of
+    `select_blocks` so the hierarchical race partitions evenly (a pow2
+    window covers any pow2 block count; odd block counts fall back to
+    full width). Returns None — run unwindowed — once the window reaches
+    the allocated slot count (including every full lane, where eviction
+    and ring wrap-around engage)."""
+    need = max(int(max_fill) + max(steps, 1), prune.select_k, 1)
+    w = 1 << (need - 1).bit_length()
+    nb = max(1, prune.select_blocks)
+    if w % nb or prune.select_k % nb:
+        return None
+    return None if w >= slots else w
+
+
 def protected_mask(cache: KVCache, prune: PruneConfig) -> jax.Array:
     """[B, Hk, S] — slots that must never be evicted (sinks + recent)."""
     is_sink = (cache.pos >= 0) & (cache.pos < prune.sink_tokens)

@@ -15,6 +15,7 @@ from repro.kernels.approx_score import approx_score as _approx_pallas
 from repro.kernels.flash_prefill import flash_prefill as _flash_pallas
 from repro.kernels.fused_decode import fused_decode as _fused_pallas
 from repro.kernels.gather_attention import gather_attention as _gather_pallas
+from repro.kernels.ragged_decode import ragged_decode as _ragged_pallas
 
 
 def _on_tpu() -> bool:
@@ -60,15 +61,29 @@ def gather_attention(q, k, v, valid, block_k: int = 512,
 
 def fused_decode(q, qq, qscale, mirror, mscale, kscale, vscale, valid,
                  prot, k, v, select_k: int, num_blocks: int = 1,
-                 backend: str = "auto"):
+                 backend: str = "auto", fills=None):
     """Fused single-pass pruned decode (score → select → gather → attend).
 
     Shapes as in kernels/fused_decode.py. The XLA fallback is one fused
     region whose gather touches only the selected rows; the Pallas kernel
     additionally keeps scores/indices out of HBM and DMAs winners row by
     row. Returns (out [BH, G, dv], probs [BH, S]).
+
+    `fills` ([BH] int32, optional): per-row live slot counts. With global
+    selection (num_blocks == 1) on the Pallas backend this dispatches the
+    RAGGED kernel (kernels/ragged_decode.py), which scalar-prefetches the
+    live-block counts and early-exits dead k-blocks — each lane pays its
+    own O(fill) instead of O(S). The XLA fallback needs no fills: slots
+    beyond fill are invalid and already masked, so its result is
+    identical either way.
     """
     s = mirror.shape[1]
+    if backend == "xla" or (backend == "auto" and not _on_tpu()):
+        pass                       # the reference path masks, not skips
+    elif fills is not None and num_blocks == 1:
+        return _ragged_pallas(
+            fills, q, qq, qscale, mirror, mscale, kscale, vscale, valid,
+            prot, k, v, select_k=select_k, interpret=not _on_tpu())
     if s % num_blocks:
         # ragged tail: pad to equal selection blocks (both backends see the
         # same partition; pad slots are invalid so they never win the race)

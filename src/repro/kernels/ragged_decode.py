@@ -1,0 +1,234 @@
+"""Pallas TPU kernel — ragged fused decode: per-lane, not max-lane, cost.
+
+The fused single-pass engine (kernels/fused_decode.py) prices every lane at
+the allocated slot count: its grid walks all S/bs mirror blocks per
+(batch·kv-head) row even when a lane has filled 128 of 4096 slots. This
+kernel is the fill-aware variant — the software analogue of the paper's
+O(1) per-array CAM race for a *mixed* batch:
+
+  * the per-row live-block count ``ceil(fill / bs)`` is SCALAR-PREFETCHED,
+    so it is available to the index maps before the kernel body runs;
+  * dead k-blocks (block index >= live count) remap their mirror DMA to
+    the last live block — Pallas elides the copy when consecutive grid
+    steps fetch the same block, so a dead block moves no mirror bytes;
+  * ``pl.when`` skips the dead block's scoring entirely — a short lane
+    pays O(fill) compute + bandwidth while a long lane in the same batch
+    pays its own O(fill), instead of everyone paying O(max over lanes).
+
+Selection is GLOBAL top-k (the ``num_blocks == 1`` semantics of the fused
+kernel / ``ref.fused_decode_ref``): scores accumulate into a VMEM buffer
+initialised to NEG_INF — dead regions therefore rank exactly like invalid
+slots — and the last grid step runs the race, DMAs only the winners' K/V
+rows from HBM, and emits the exact attention output plus the per-slot
+charge-domain probabilities.
+
+  fills  [BH]        int32           live slot count per row (lane fill)
+  q      [BH, G, d]  storage dtype   exact queries
+  qq     [BH, G, d]  int8            quantized queries (CAM drive lines)
+  qscale [BH, G]     f32
+  mirror [BH, S, d]  int8            key mirror (int8-KV mode: K itself)
+  mscale [BH, S]     f32
+  kscale [BH, S]     f32             K-row dequant scale (ones for bf16)
+  vscale [BH, S]     f32
+  valid  [BH, S]     int8
+  prot   [BH, S]     int8            protected slots always win the race
+  k      [BH, S, d]  ANY/HBM         exact keys   — winners DMA'd only
+  v      [BH, S, dv] ANY/HBM         exact values — winners DMA'd only
+  out    [BH, G, dv] f32
+  probs  [BH, S]     f32             Σ_g softmax_g(scores/√d)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+PROT_WIN = 1e30
+PICKED = -1e35
+
+
+def _ragged_decode_kernel(nblk_ref, q_ref, qq_ref, qs_ref, mir_ref, ms_ref,
+                          ks_ref, vs_ref, valid_ref, prot_ref, k_any, v_any,
+                          out_ref, probs_ref,
+                          score_buf, ksel, vsel, sem,
+                          *, nb, bs, s_pad, k_sel_n, scale):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    live_blocks = nblk_ref[i]
+
+    @pl.when(j == 0)
+    def _init():
+        # dead regions keep NEG_INF: they race exactly like invalid slots
+        score_buf[...] = jnp.full_like(score_buf, NEG_INF)
+
+    # -- CAM mode: score this block iff it holds any live slot --
+    @pl.when(j < live_blocks)
+    def _score():
+        qqf = qq_ref[0].astype(jnp.float32)                # [G, d]
+        mir = mir_ref[0].astype(jnp.float32)               # [bs, d]
+        raw = jax.lax.dot_general(
+            qqf, mir, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)            # [G, bs]
+        ms = ms_ref[0, pl.ds(j * bs, bs)]
+        raw = raw * qs_ref[0][:, None] * ms[None, :]
+        validb = valid_ref[0, pl.ds(j * bs, bs)][None, :] != 0
+        score_buf[:, pl.ds(j * bs, bs)] = jnp.where(validb, raw, NEG_INF)
+
+    # -- final grid step: global CAM race + winner DMA + exact attention --
+    @pl.when(j == nb - 1)
+    def _select_attend():
+        buf = score_buf[...]                               # [G, S_pad]
+        ssel = jnp.sum(buf, axis=0, keepdims=True)         # [1, S_pad]
+        ssel = jnp.where(prot_ref[0][None, :] != 0, PROT_WIN, ssel)
+        iota_s = jax.lax.broadcasted_iota(jnp.int32, (1, s_pad), 1)
+        iota_k = jax.lax.broadcasted_iota(jnp.int32, (k_sel_n, 1), 0)
+
+        def _copies(slot_idx, t):
+            return (pltpu.make_async_copy(k_any.at[i, pl.ds(slot_idx, 1)],
+                                          ksel.at[pl.ds(t, 1)], sem.at[0]),
+                    pltpu.make_async_copy(v_any.at[i, pl.ds(slot_idx, 1)],
+                                          vsel.at[pl.ds(t, 1)], sem.at[1]))
+
+        def select_one(t, carry):
+            sc, onehot, prev = carry
+            idx = jnp.argmax(sc).astype(jnp.int32)         # first max wins
+            row = iota_s == idx
+            onehot = onehot + jnp.where((iota_k == t) & row, 1.0, 0.0)
+            # depth-1 DMA pipeline, as in the fused kernel
+
+            @pl.when(t > 0)
+            def _drain_prev():
+                for cp in _copies(prev, t - 1):
+                    cp.wait()
+
+            for cp in _copies(idx, t):
+                cp.start()
+            return jnp.where(row, PICKED, sc), onehot, idx
+
+        carry0 = (ssel, jnp.zeros((k_sel_n, s_pad), jnp.float32),
+                  jnp.int32(0))
+        _, onehot, last = jax.lax.fori_loop(0, k_sel_n, select_one, carry0)
+        for cp in _copies(last, k_sel_n - 1):
+            cp.wait()
+
+        sel_ks = jax.lax.dot(onehot, ks_ref[0][:, None],
+                             preferred_element_type=jnp.float32)
+        sel_vs = jax.lax.dot(onehot, vs_ref[0][:, None],
+                             preferred_element_type=jnp.float32)
+        sel_valid = jax.lax.dot(
+            onehot, (valid_ref[0][:, None]).astype(jnp.float32),
+            preferred_element_type=jnp.float32)            # [k, 1]
+
+        k_rows = ksel[...].astype(jnp.float32) * sel_ks    # [k, d]
+        v_rows = vsel[...].astype(jnp.float32) * sel_vs    # [k, dv]
+        qf = q_ref[0].astype(jnp.float32)                  # [G, d]
+        logits = jax.lax.dot_general(
+            qf, k_rows, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale    # [G, k]
+        logits = jnp.where(sel_valid[:, 0][None, :] > 0.5, logits, NEG_INF)
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        e = jnp.exp(logits - m) * (logits > NEG_INF / 2)
+        z = jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+        out_ref[0] = jax.lax.dot(e / z, v_rows,
+                                 preferred_element_type=jnp.float32)
+
+        # -- charge-domain mode: per-slot approximate probabilities --
+        lg = buf * scale
+        mg = jnp.max(lg, axis=-1, keepdims=True)
+        eg = jnp.exp(lg - mg) * (buf > NEG_INF / 2)
+        zg = jnp.sum(eg, axis=-1, keepdims=True)
+        probs_ref[0] = jnp.sum(eg / jnp.maximum(zg, 1e-30), axis=0)
+
+
+def _pad_tail(x, s_pad, value=0):
+    pad = s_pad - x.shape[1]
+    if pad == 0:
+        return x
+    widths = [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("select_k", "block_s", "interpret",
+                                    "block_align"))
+def ragged_decode(fills: jax.Array, q: jax.Array, qq: jax.Array,
+                  qscale: jax.Array, mirror: jax.Array, mscale: jax.Array,
+                  kscale: jax.Array, vscale: jax.Array, valid: jax.Array,
+                  prot: jax.Array, k: jax.Array, v: jax.Array, *,
+                  select_k: int, block_s: int = 512,
+                  interpret: bool = False, block_align: int = 0):
+    """Fill-aware fused decode. Returns (out [BH,G,dv], probs [BH,S]).
+
+    Global (num_blocks == 1) selection semantics — bitwise-compatible
+    with ``ref.fused_decode_ref(..., num_blocks=1)`` whenever slots at
+    and beyond ``fills[i]`` are invalid (the cache write discipline).
+    Trailing padding to a block multiple is appended as invalid slots;
+    block_align=0 picks the backend default (none in interpret mode,
+    128 lanes on TPU)."""
+    bh, g, d = q.shape
+    s = mirror.shape[1]
+    dv = v.shape[-1]
+    assert select_k <= s, (select_k, s)
+    align = block_align or (1 if interpret else 128)
+    bs = -(-min(block_s, s) // align) * align
+    s_pad = -(-s // bs) * bs
+    nb = s_pad // bs
+    mirror, k, v = (_pad_tail(x, s_pad) for x in (mirror, k, v))
+    mscale, kscale, vscale, valid, prot = (
+        _pad_tail(x, s_pad) for x in (mscale, kscale, vscale, valid, prot))
+    nblk = jnp.clip(-(-jnp.minimum(fills.astype(jnp.int32), s) // bs),
+                    0, nb)
+
+    def blk(j, cnt):
+        # dead blocks re-fetch the last live block: the pipeline sees an
+        # unchanged block index and elides the mirror copy entirely
+        return jnp.maximum(jnp.minimum(j, cnt - 1), 0)
+
+    kernel = functools.partial(_ragged_decode_kernel, nb=nb, bs=bs,
+                               s_pad=s_pad, k_sel_n=select_k,
+                               scale=1.0 / (d ** 0.5))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bh, nb),
+        in_specs=[
+            pl.BlockSpec((1, g, d), lambda i, j, c: (i, 0, 0)),   # q
+            pl.BlockSpec((1, g, d), lambda i, j, c: (i, 0, 0)),   # qq
+            pl.BlockSpec((1, g), lambda i, j, c: (i, 0)),         # qscale
+            pl.BlockSpec((1, bs, d),
+                         lambda i, j, c: (i, blk(j, c[i]), 0)),   # mirror
+            pl.BlockSpec((1, s_pad), lambda i, j, c: (i, 0)),     # mscale
+            pl.BlockSpec((1, s_pad), lambda i, j, c: (i, 0)),     # kscale
+            pl.BlockSpec((1, s_pad), lambda i, j, c: (i, 0)),     # vscale
+            pl.BlockSpec((1, s_pad), lambda i, j, c: (i, 0)),     # valid
+            pl.BlockSpec((1, s_pad), lambda i, j, c: (i, 0)),     # prot
+            pl.BlockSpec(memory_space=pltpu.ANY),                 # k (HBM)
+            pl.BlockSpec(memory_space=pltpu.ANY),                 # v (HBM)
+        ],
+        out_specs=[
+            pl.BlockSpec((1, g, dv), lambda i, j, c: (i, 0, 0)),
+            pl.BlockSpec((1, s_pad), lambda i, j, c: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, s_pad), jnp.float32),     # score buffer
+            pltpu.VMEM((select_k, d), k.dtype),      # gathered K winners
+            pltpu.VMEM((select_k, dv), v.dtype),     # gathered V winners
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    out, probs = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, g, dv), jnp.float32),
+            jax.ShapeDtypeStruct((bh, s_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(nblk, q, qq, qscale.astype(jnp.float32), mirror,
+      mscale.astype(jnp.float32), kscale.astype(jnp.float32),
+      vscale.astype(jnp.float32), valid.astype(jnp.int8),
+      prot.astype(jnp.int8), k, v)
+    return out, probs[:, :s]

@@ -61,6 +61,12 @@ def fused_decode_ref(q, qq, qscale, mirror, mscale, kscale, vscale, valid,
     int8 mirror, block-local top-k, gather ONLY the winners (XLA gather
     reads k rows, not S), exact softmax attention, and the per-slot
     approximate probabilities. Returns (out [BH,G,dv], probs [BH,S]).
+
+    With num_blocks == 1 this is ALSO the oracle for the ragged kernel
+    (kernels/ragged_decode.py): slots at/beyond a lane's fill are invalid
+    here — NEG_INF-scored, masked out of the attention, zero probability
+    — so masking (this path) and skipping (the ragged kernel's dead-block
+    early exit) agree to the bit on every live value.
     """
     bh, g, d = q.shape
     s = mirror.shape[1]

@@ -85,15 +85,17 @@ def pad_to_bucket(prompt: np.ndarray,
 
 
 def greedy_generate(model: Model, params, batch, steps: int,
-                    temperature: float = 0.0, key=None, top_k: int = 0):
+                    temperature: float = 0.0, key=None, top_k: int = 0,
+                    top_p: float = 0.0):
     """Prefill + `steps` decode steps. Returns [B, steps] generated ids.
 
     One Python dispatch per token — the REFERENCE loop. Production
     serving uses the scanned paths, which support the same
-    temperature/top-k sampling in-device (`ServeLoop(temperature=...,
-    top_k=...)` / `decode_block_masked`); this loop shares their
-    `_next_token` rule, so both stay interchangeable. `key` defaults to
-    PRNGKey(0) when sampling (temperature > 0).
+    temperature/top-k/top-p sampling in-device (`ServeLoop(
+    temperature=..., top_k=..., top_p=...)` / `decode_block_masked`);
+    this loop shares their `_next_token` rule, so both stay
+    interchangeable. `key` defaults to PRNGKey(0) when sampling
+    (temperature > 0).
     """
     if temperature > 0 and key is None:
         key = jax.random.PRNGKey(0)
@@ -108,20 +110,24 @@ def greedy_generate(model: Model, params, batch, steps: int,
             key, sub = jax.random.split(key)
         else:
             sub = key
-        tok = _next_token(logits, sub, temperature, top_k)
+        tok = _next_token(logits, sub, temperature, top_k, top_p)
     return jnp.stack(toks, axis=1), state
 
 
-def decode_block(model: Model, params, state, tok, steps: int):
+def decode_block(model: Model, params, state, tok, steps: int,
+                 window: Optional[int] = None):
     """`steps` greedy decode steps as one lax.scan (pure, traceable).
 
     tok: [B] current token → (state, next_tok [B], toks [steps, B]) where
     toks[0] == tok (the scan emits, then advances — same order as the
-    per-token loop).
+    per-token loop). `window` (static) runs every step over the
+    `[:window]` slot prefix — the caller guarantees it covers
+    max(fill) + steps (see `core/cache.decode_window`).
     """
     def body(carry, _):
         state, tok = carry
-        logits, state = model.decode_step(params, state, tok)
+        logits, state = model.decode_step(params, state, tok,
+                                          window=window)
         nxt = jnp.argmax(logits, -1)
         return (state, nxt), tok
 
@@ -129,22 +135,35 @@ def decode_block(model: Model, params, state, tok, steps: int):
     return state, tok, toks
 
 
-def _next_token(logits, key, temperature: float, top_k: int):
+def _next_token(logits, key, temperature: float, top_k: int,
+                top_p: float = 0.0):
     """Next-token rule shared by the decode block and admission seeding:
     argmax when temperature == 0 (key unused), else categorical over
-    logits/temperature, optionally truncated to the per-row top_k.
-    logits: [..., V] → [...] token ids."""
+    logits/temperature, optionally truncated to the per-row top_k
+    highest logits and/or the top-p (nucleus) smallest set of tokens
+    whose probability mass reaches `top_p` (top-k truncation applies
+    first, matching the usual sampler convention; top_p outside (0, 1)
+    disables nucleus truncation). logits: [..., V] → [...] token ids."""
     if temperature <= 0:
         return jnp.argmax(logits, -1)
     if top_k > 0:
         kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
         logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if 0.0 < top_p < 1.0:
+        sl = jnp.sort(logits, axis=-1)[..., ::-1]          # descending
+        p = jax.nn.softmax(sl / temperature, axis=-1)
+        # keep the minimal prefix whose mass reaches top_p: a token stays
+        # iff the mass BEFORE it is < top_p (the first token always does)
+        keep = jnp.cumsum(p, axis=-1) - p < top_p
+        cut = jnp.min(jnp.where(keep, sl, jnp.inf), -1, keepdims=True)
+        logits = jnp.where(logits < cut, -jnp.inf, logits)
     return jax.random.categorical(key, logits / temperature, axis=-1)
 
 
 def decode_block_masked(model: Model, params, state, tok, active, rem,
                         eos, key, steps: int, temperature: float = 0.0,
-                        top_k: int = 0):
+                        top_k: int = 0, top_p: float = 0.0,
+                        window: Optional[int] = None):
     """`steps` decode steps with in-device per-lane termination.
 
     active: [B] bool lane-live mask; rem: [B] int32 remaining budget;
@@ -160,15 +179,22 @@ def decode_block_masked(model: Model, params, state, tok, active, rem,
     every tokens/s metric derived from them), while budget-terminated
     lanes still emit exactly their `rem` tokens.
 
-    `temperature`/`top_k` are compile-time sampling knobs: temperature 0
-    (default) keeps the bitwise-greedy argmax path with no RNG in the
-    loop; temperature > 0 samples from logits/temperature, optionally
-    truncated to the top_k highest-probability tokens per lane. Returns
+    `temperature`/`top_k`/`top_p` are compile-time sampling knobs:
+    temperature 0 (default) keeps the bitwise-greedy argmax path with no
+    RNG in the loop; temperature > 0 samples from logits/temperature,
+    optionally truncated to the top_k highest-probability tokens and/or
+    the top-p nucleus per lane. `window` (static) runs every decode step
+    over the `[:window]` slot prefix; the caller sizes it to cover
+    max(fill over active lanes) + steps, so active-lane math is
+    bit-identical to full width, while inactive lanes (whose fills the
+    window may NOT cover) are safe because their state writes are
+    dropped by `lane_select` and their tokens are never emitted. Returns
     (state, tok, active, rem, key, toks [steps, B], emitted [steps, B]).
     """
     def body(carry, _):
         state, tok, active, rem, key = carry
-        logits, new_state = model.decode_step(params, state, tok)
+        logits, new_state = model.decode_step(params, state, tok,
+                                              window=window)
         state = lane_select(active, new_state, state)
         live = active & (rem > 0)      # robust to active lanes w/o budget
         emit = live & (tok != eos)
@@ -178,7 +204,8 @@ def decode_block_masked(model: Model, params, state, tok, active, rem,
             key, sub = jax.random.split(key)
         else:
             sub = key
-        nxt = _next_token(logits, sub, temperature, top_k).astype(tok.dtype)
+        nxt = _next_token(logits, sub, temperature, top_k,
+                          top_p).astype(tok.dtype)
         return (state, nxt, active, rem, key), (tok, emit)
 
     eos = jnp.asarray(eos, jnp.int32)
@@ -210,22 +237,27 @@ def _rebuild(cfg, prune, slots, remat, remat_policy) -> Model:
                  remat_policy=remat_policy)
 
 
-@functools.lru_cache(maxsize=32)
-def _block_fn(key, steps: int):
+@functools.lru_cache(maxsize=64)
+def _block_fn(key, steps: int, window: Optional[int] = None):
     model = _rebuild(*key)
-    return jax.jit(functools.partial(decode_block, model, steps=steps),
+    return jax.jit(functools.partial(decode_block, model, steps=steps,
+                                     window=window),
                    donate_argnums=_donate_argnums(1, 2))
 
 
-@functools.lru_cache(maxsize=32)
+@functools.lru_cache(maxsize=64)
 def _masked_block_fn(key, steps: int, temperature: float = 0.0,
-                     top_k: int = 0):
-    # keyed on `steps` (+ the static sampling knobs) ONLY: eos and the
-    # PRNG key are runtime arguments, so one compiled program serves
-    # every (steps, eos) combination instead of one per pair
+                     top_k: int = 0, top_p: float = 0.0,
+                     window: Optional[int] = None):
+    # keyed on `steps` (+ the static sampling knobs + the slot window)
+    # ONLY: eos and the PRNG key are runtime arguments, so one compiled
+    # program serves every (steps, eos) combination instead of one per
+    # pair. Windows are powers of two (core/cache.decode_window), so the
+    # window axis adds at most log2(slots) programs per steps value.
     model = _rebuild(*key)
     fn = functools.partial(decode_block_masked, model, steps=steps,
-                           temperature=temperature, top_k=top_k)
+                           temperature=temperature, top_k=top_k,
+                           top_p=top_p, window=window)
     return jax.jit(fn, donate_argnums=_donate_argnums(1, 2, 3, 4, 6))
 
 
@@ -267,26 +299,29 @@ def _jit_decode_block(model: Model, steps: int):
 
 
 def _admit_lane_state(state, tok, lane, fresh, logits, key,
-                      temperature: float = 0.0, top_k: int = 0):
+                      temperature: float = 0.0, top_k: int = 0,
+                      top_p: float = 0.0):
     """One-dispatch admission: splice `fresh` into `lane` and seed its
     first token from the prefill logits — via the engine's next-token
     rule, so sampling covers the FIRST generated token too, not just the
     scanned steps (state/tok donated in place; key unused when greedy)."""
     state = lane_insert(state, lane, fresh)
-    seed = _next_token(logits, key, temperature, top_k)
+    seed = _next_token(logits, key, temperature, top_k, top_p)
     tok = tok.at[lane].set(seed.astype(tok.dtype))
     return state, tok
 
 
 @functools.lru_cache(maxsize=8)
-def _admit_fn(temperature: float = 0.0, top_k: int = 0):
+def _admit_fn(temperature: float = 0.0, top_k: int = 0,
+              top_p: float = 0.0):
     fn = functools.partial(_admit_lane_state, temperature=temperature,
-                           top_k=top_k)
+                           top_k=top_k, top_p=top_p)
     return jax.jit(fn, donate_argnums=_donate_argnums(0, 1))
 
 
 def _admit_group_state(state, tok, src, fresh, logits, key,
-                       temperature: float = 0.0, top_k: int = 0):
+                       temperature: float = 0.0, top_k: int = 0,
+                       top_p: float = 0.0):
     """One-dispatch grouped admission: splice every mapped row of the
     batch-G `fresh` state into the live state (`lanes_insert` over the
     whole pytree) and seed each spliced lane's first token from its row
@@ -294,16 +329,17 @@ def _admit_group_state(state, tok, src, fresh, logits, key,
     `src` maps live lane -> fresh row (-1 = lane untouched); state/tok
     donated in place."""
     state = lanes_insert(state, src, fresh)
-    seeded = _next_token(logits, key, temperature, top_k)      # [G]
+    seeded = _next_token(logits, key, temperature, top_k, top_p)   # [G]
     picked = jnp.take(seeded.astype(tok.dtype), jnp.maximum(src, 0))
     tok = jnp.where(src >= 0, picked, tok)
     return state, tok
 
 
 @functools.lru_cache(maxsize=8)
-def _admit_group_fn(temperature: float = 0.0, top_k: int = 0):
+def _admit_group_fn(temperature: float = 0.0, top_k: int = 0,
+                    top_p: float = 0.0):
     fn = functools.partial(_admit_group_state, temperature=temperature,
-                           top_k=top_k)
+                           top_k=top_k, top_p=top_p)
     return jax.jit(fn, donate_argnums=_donate_argnums(0, 1))
 
 
@@ -336,6 +372,7 @@ class Request:
     max_new: int
     arrival: float = 0.0
     bucket: int = 0            # memoized pad width under the loop's grid
+    admitted: bool = False     # lazy-prune marker for the FIFO-order deque
 
 
 @dataclasses.dataclass
@@ -441,9 +478,27 @@ class ServeLoop:
     sorted tuple to pin the grid, or `buckets=None` for legacy
     exact-length prefills (one compile per distinct length).
 
-    **Sampling** (`temperature`, `top_k`): temperature > 0 switches the
-    engine from argmax to categorical sampling over logits/temperature
-    (optionally truncated to the top_k most likely tokens per lane) —
+    **Windowed decode (default).** Before each decode block the engine
+    reads the active lanes' cache fills (a [L, lanes] int32 — a few
+    hundred bytes of host traffic it pays anyway when it consumes the
+    block's tokens) and dispatches the block over the smallest
+    power-of-two slot window covering `max(fill) + block` (
+    `core/cache.decode_window`). Live slots always occupy the fill
+    prefix, so the windowed block is bit-identical to full width while
+    every stage — CAM scoring over the mirror, the top-k race, the
+    winner gather, exact attention, and the charge-domain accumulation —
+    touches O(window) instead of O(slots) bytes: decode cost tracks the
+    LIVE context, which is the paper's premise. The window only grows
+    back to full width when a lane actually approaches the slot budget
+    (where eviction/ring-wrap engages), and the pow2 grid bounds the jit
+    cache at log2(slots) extra programs (`counters["decode_windows"]`
+    counts the distinct windows this loop compiled). `window=None`
+    disables it (always full width).
+
+    **Sampling** (`temperature`, `top_k`, `top_p`): temperature > 0
+    switches the engine from argmax to categorical sampling over
+    logits/temperature (optionally truncated to the top_k most likely
+    tokens and/or the minimal top-p nucleus per lane, top-k first) —
     covering the admission-seeded FIRST token as well as the scanned
     decode steps — with the PRNG key threaded through the scan carry
     and advanced once per generated step; `sample_seed` pins the
@@ -451,6 +506,15 @@ class ServeLoop:
     so grouped and sequential admission draw different (equally valid)
     samples. Greedy (temperature=0, the default) stays bitwise-unchanged
     and carries no RNG.
+
+    **Scheduler cost.** The queue is per-bucket FIFO deques plus an
+    arrival spill list: each `schedule()` round drains newly-arrived
+    requests into their bucket deque (O(1) each, amortized), then picks
+    the target bucket by scanning the O(len(buckets)) non-empty deque
+    heads — NOT the O(arrived-requests) queue — so admission stays flat
+    under a million-deep backlog. FIFO order within a bucket is the
+    deque order; the global-FIFO head used by the off-load path and the
+    aging bound is tracked with a lazily-pruned arrival-order deque.
 
     **Chunked-prefill admission** (`chunk_prefill=C`, Sarathi-style): a
     prompt whose bucket exceeds C is prefilled in C-token slices that
@@ -470,7 +534,8 @@ class ServeLoop:
                  chunk_prefill: int = 0, group_admit: bool = True,
                  max_head_skips: int = 8,
                  temperature: float = 0.0, top_k: int = 0,
-                 sample_seed: int = 0):
+                 top_p: float = 0.0, sample_seed: int = 0,
+                 window: Union[str, None] = "auto"):
         self.model = model
         self.params = params
         self.lanes = lanes
@@ -490,6 +555,10 @@ class ServeLoop:
         self._head_skips = 0
         self.temperature = float(temperature)
         self.top_k = int(top_k)
+        self.top_p = float(top_p)
+        assert window in ("auto", None), window   # no silent full-width
+        self.window = window                  # "auto" | None
+        self._windows: set = set()            # distinct windows dispatched
         self._key = jax.random.PRNGKey(sample_seed)
         self._prefill = _prefill_fn(_model_key(model))
         self._prefill_one = _prefill_one_fn(_model_key(model))
@@ -502,7 +571,15 @@ class ServeLoop:
         self.remaining = np.zeros(lanes, np.int32)
         self.outputs: List[List[int]] = [[] for _ in range(lanes)]
         self.done: List[List[int]] = []
-        self.queue: Deque[Request] = deque()
+        # Scheduler state: `_arrivals` holds not-yet-arrived requests in
+        # arrival order; once arrived they move into their bucket's FIFO
+        # deque (`_bucket_q`) and onto `_arrived_fifo` (arrival order,
+        # admitted entries lazily pruned — Request.admitted flags them).
+        self._arrivals: Deque[Request] = deque()
+        self._bucket_q: Dict[int, Deque[Request]] = {}
+        self._arrived_fifo: Deque[Request] = deque()
+        self._arrived_count = 0
+        self._drained_hwm = float("-inf")     # newest arrival drained
         self.stats: Dict[int, RequestStats] = {}
         self.completed: List[RequestStats] = []
         self._lane_rid: List[Optional[int]] = [None] * lanes
@@ -518,6 +595,7 @@ class ServeLoop:
             "prefill_dispatches": 0, "admit_dispatches": 0,
             "chunk_dispatches": 0, "decode_blocks": 0,
             "grouped_admissions": 0, "grouped_requests": 0,
+            "decode_windows": 0,
         }
 
     # -- time ----------------------------------------------------------------
@@ -536,16 +614,74 @@ class ServeLoop:
         req = Request(rid, prompt,
                       self.max_new if max_new is None else max_new, arrival)
         req.bucket = self._bucket_of(req)     # memoized for the scheduler
-        if self.queue and arrival < self.queue[-1].arrival:
-            # keep arrival order (FIFO among ties) — schedule() peeks head
-            idx = next(i for i, r in enumerate(self.queue)
+        if arrival < self._drained_hwm:
+            # backdated submit landing AMONG already-drained requests:
+            # splice it into the arrived structures at its arrival rank
+            # (O(arrived) — a rare replay/test path; the hot path below
+            # stays O(1)/O(log)) so the global-FIFO head and the aging
+            # bound keep protecting the true oldest request
+            self._insert_arrived(req)
+        elif self._arrivals and arrival < self._arrivals[-1].arrival:
+            # keep arrival order (FIFO among ties) — the drain pops head
+            idx = next(i for i, r in enumerate(self._arrivals)
                        if r.arrival > arrival)
-            self.queue.insert(idx, req)
+            self._arrivals.insert(idx, req)
         else:
-            self.queue.append(req)
+            self._arrivals.append(req)
         self.stats[rid] = RequestStats(rid, len(prompt), req.max_new,
                                        t_arrival=arrival)
         return rid
+
+    def _insert_arrived(self, req: Request) -> None:
+        """Insert at arrival rank (after ties) into the arrived deques."""
+        def rank(dq):
+            for i, r in enumerate(dq):
+                if r.arrival > req.arrival:
+                    return i
+            return len(dq)
+        self._arrived_fifo.insert(rank(self._arrived_fifo), req)
+        dq = self._bucket_q.setdefault(req.bucket, deque())
+        dq.insert(rank(dq), req)
+        self._arrived_count += 1
+
+    @property
+    def queue(self) -> List[Request]:
+        """Waiting (un-admitted) requests in arrival order — arrived
+        first, then future arrivals. A snapshot view over the scheduler's
+        per-bucket deques + arrival spill list (read-only)."""
+        waiting = [r for r in self._arrived_fifo if not r.admitted]
+        return waiting + list(self._arrivals)
+
+    def _drain_arrivals(self, now: float) -> None:
+        """Move every request whose arrival time has passed into its
+        bucket's FIFO deque. O(newly arrived) — each request is moved
+        exactly once over the loop's lifetime."""
+        while self._arrivals and self._arrivals[0].arrival <= now:
+            req = self._arrivals.popleft()
+            self._bucket_q.setdefault(req.bucket, deque()).append(req)
+            self._arrived_fifo.append(req)
+            self._arrived_count += 1
+            self._drained_hwm = max(self._drained_hwm, req.arrival)
+
+    def _fifo_head(self) -> Optional[Request]:
+        """Oldest arrived, un-admitted request (lazy-pruned deque head)."""
+        fifo = self._arrived_fifo
+        while fifo and fifo[0].admitted:
+            fifo.popleft()
+        return fifo[0] if fifo else None
+
+    def _take_bucket(self, bucket: int, n: int) -> List[Request]:
+        """Pop up to `n` FIFO requests from one bucket's deque."""
+        dq = self._bucket_q.get(bucket)
+        group: List[Request] = []
+        while dq and len(group) < n:
+            req = dq.popleft()
+            req.admitted = True
+            group.append(req)
+        if dq is not None and not dq:
+            del self._bucket_q[bucket]
+        self._arrived_count -= len(group)
+        return group
 
     # -- admission -----------------------------------------------------------
 
@@ -597,7 +733,8 @@ class ServeLoop:
     def _splice(self, lane: int, req: Request, logits, fresh,
                 bucket: int, prefill_chunks: int = 1):
         """Insert a freshly prefilled batch-1 state into a free lane."""
-        self.state, self.tok = _admit_fn(self.temperature, self.top_k)(
+        self.state, self.tok = _admit_fn(
+            self.temperature, self.top_k, self.top_p)(
             self.state, self.tok, lane, fresh, logits, self._sample_key())
         self.counters["admit_dispatches"] += 1
         self._register_admit(lane, req, bucket=bucket,
@@ -637,7 +774,8 @@ class ServeLoop:
                                                 jnp.asarray(rows),
                                                 jnp.asarray(lengths))
         self.counters["prefill_dispatches"] += 1
-        self.state, self.tok = _admit_group_fn(self.temperature, self.top_k)(
+        self.state, self.tok = _admit_group_fn(
+            self.temperature, self.top_k, self.top_p)(
             self.state, self.tok, jnp.asarray(src), fresh, logits,
             self._sample_key())
         self.counters["admit_dispatches"] += 1
@@ -737,71 +875,66 @@ class ServeLoop:
         whole-prompt dispatch; at most one sliced prefill is in flight
         at a time — while one is, a chunk-needing target falls back to
         the shortest chunk-free bucket (aging credit untouched) so free
-        lanes never idle behind the sliced prefill."""
+        lanes never idle behind the sliced prefill.
+
+        Each round is O(newly arrived + len(buckets)): requests whose
+        arrival passed are drained once into their bucket's FIFO deque,
+        the target bucket comes from the deque heads, and the group is
+        popped from one deque — never a scan over the arrived backlog.
+        """
         n = 0
-        while self.queue:
-            now = self._now()
-            if self.queue[0].arrival > now:
+        while True:
+            self._drain_arrivals(self._now())
+            if self._arrived_count == 0:
                 break
             free = [int(lane) for lane in np.flatnonzero(~self.active)
                     if self._pending is None
                     or int(lane) != self._pending.lane]
             if not free:
                 break
-            arrived: List[Request] = []
-            for r in self.queue:               # arrival-ordered prefix
-                if r.arrival > now:
-                    break
-                arrived.append(r)
+            fifo_head = self._fifo_head()      # arrived_count > 0 ⇒ set
             if not self.group_admit:
-                group = [arrived[0]]
+                target, take = fifo_head.bucket, 1
             else:
-                if len(arrived) > len(free):   # under load: shortest first
-                    target = min(r.bucket for r in arrived)
-                    if (target != arrived[0].bucket
+                if self._arrived_count > len(free):
+                    target = min(self._bucket_q)   # shortest present
+                    if (target != fifo_head.bucket
                             and self._head_skips >= self.max_head_skips):
-                        target = arrived[0].bucket     # aging kicks in
+                        target = fifo_head.bucket  # aging kicks in
                 else:                          # off load: FIFO head
-                    target = arrived[0].bucket
-                group = [r for r in arrived
-                         if r.bucket == target][:len(free)]
+                    target = fifo_head.bucket
+                take = len(free)
             if (self.group_admit and self._pending is not None
-                    and self._needs_chunking(group[0].bucket)):
+                    and self._needs_chunking(target)):
                 # one sliced prefill at a time — instead of idling the
                 # free lanes behind it, admit the shortest chunk-free
                 # bucket this round; the head's aging credit is NOT
                 # touched on a blocked round, so the max_head_skips
                 # bound keeps holding
-                alts = [r for r in arrived
-                        if not self._needs_chunking(r.bucket)]
+                alts = [b for b in self._bucket_q
+                        if not self._needs_chunking(b)]
                 if not alts:
                     break
-                target = min(r.bucket for r in alts)
-                group = [r for r in alts
-                         if r.bucket == target][:len(free)]
-            head = group[0]
-            if self._needs_chunking(head.bucket):
+                target = min(alts)
+            if self._needs_chunking(target):
                 if self._pending is not None:
                     break                      # one sliced prefill at a time
-                # aging accounting: `in`/`is` are identity comparisons
+                # aging accounting: `is`/`in` are identity comparisons
                 # (Request eq=False); only rounds that ADMIT something
                 # consume or earn credit
-                self._head_skips = (0 if arrived[0] is head
+                head = self._take_bucket(target, 1)[0]
+                self._head_skips = (0 if fifo_head is head
                                     else self._head_skips + 1)
-                self.queue.remove(head)
                 self._start_chunked(free[0], head,
                                     self._padded_prompt(head)[0],
                                     head.bucket)
                 continue
-            self._head_skips = (0 if arrived[0] in group
+            group = self._take_bucket(target, take)
+            self._head_skips = (0 if fifo_head in group
                                 else self._head_skips + 1)
             if len(group) == 1:
-                self.queue.remove(head)
-                self._admit_lane(free[0], head)
+                self._admit_lane(free[0], group[0])
             else:
-                picked = set(map(id, group))   # one O(queue) rebuild,
-                self.queue = deque(            # not O(queue) per member
-                    r for r in self.queue if id(r) not in picked)
                 self._admit_group(free[:len(group)], group)
             n += len(group)
         return n
@@ -818,7 +951,7 @@ class ServeLoop:
         # same next-token rule as lane admission: sampling (when enabled)
         # covers the first generated token on this path too
         self.tok = _next_token(logits, self._sample_key(), self.temperature,
-                               self.top_k).astype(jnp.int32)
+                               self.top_k, self.top_p).astype(jnp.int32)
         self.active[:] = self.max_new > 0
         self.remaining[:] = max(self.max_new, 0)
         self.outputs = [[] for _ in range(self.lanes)]
@@ -837,17 +970,38 @@ class ServeLoop:
         """One decode step over all lanes; returns True while any lane live."""
         return self.step_block(1)
 
+    def _decode_window(self, steps: int) -> Optional[int]:
+        """Slot window for the next decode block: the smallest pow2 prefix
+        covering every ACTIVE lane's fill plus the block's appends (None =
+        full width). Inactive lanes may overflow the window; their writes
+        are dropped in-device by `lane_select` and their outputs masked,
+        so only active-lane coverage matters for bit-exactness."""
+        if self.window != "auto" or self.state is None \
+                or self.state.kv is None or not self.active.any():
+            return None
+        from repro.core.cache import decode_window
+        fill = np.asarray(self.state.kv.fill)          # [L, lanes]
+        max_fill = int(fill[:, self.active].max())
+        return decode_window(max_fill, steps, self.model.decode_slots,
+                             self.model.prune)
+
     def step_block(self, steps: int = 0) -> bool:
         """Decode `steps` (default: self.block) tokens in one dispatch.
 
         Finished lanes stop writing in-device; the host side consumes the
         (token, emitted) pairs with vectorized numpy — no per-token loop.
+        Each block dispatches over the fill-covering slot window (see
+        `_decode_window`), so step cost tracks the live context.
         """
         steps = steps or self.block
         if self.state is None or not self.active.any():
             return bool(self.active.any())
+        window = self._decode_window(steps)
+        self._windows.add(window)
+        self.counters["decode_windows"] = len(self._windows)
         fn = _masked_block_fn(_model_key(self.model), steps,
-                              self.temperature, self.top_k)
+                              self.temperature, self.top_k, self.top_p,
+                              window)
         was_active = self.active.copy()
         self.state, self.tok, active, rem, self._key, toks, emitted = fn(
             self.params, self.state, self.tok,
@@ -904,15 +1058,16 @@ class ServeLoop:
         prefills."""
         if self._t0 is None:
             self._t0 = time.monotonic()
-        while self.queue or self.active.any() or self._pending is not None:
+        while (self._arrived_count or self._arrivals or self.active.any()
+               or self._pending is not None):
             self.schedule()
             stepped = self._advance_chunked()
             if self.active.any():
                 self.step_block()
             elif not stepped:
-                if not self.queue:     # e.g. a trailing prefill-only request
+                if not self._arrivals:  # e.g. a trailing prefill-only request
                     continue
-                wait = self.queue[0].arrival - self._now()
+                wait = self._arrivals[0].arrival - self._now()
                 if wait > 0:
                     time.sleep(min(wait, 0.05))
         return self.completed
@@ -993,6 +1148,13 @@ def main(argv=None):
     ap.add_argument("--top-k", type=int, default=0,
                     help="truncate sampling to the k most likely tokens "
                          "(0 = full distribution; --serve only)")
+    ap.add_argument("--top-p", type=float, default=0.0,
+                    help="nucleus sampling: truncate to the smallest "
+                         "token set with cumulative probability >= p "
+                         "(0 = disabled; --serve only)")
+    ap.add_argument("--no-window", action="store_true",
+                    help="always decode at full slot width instead of "
+                         "the fill-covering pow2 window (--serve only)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -1019,7 +1181,9 @@ def main(argv=None):
                          buckets=None if args.no_buckets else "auto",
                          chunk_prefill=args.chunk_prefill,
                          group_admit=not args.sequential_admit,
-                         temperature=args.temperature, top_k=args.top_k)
+                         temperature=args.temperature, top_k=args.top_k,
+                         top_p=args.top_p,
+                         window=None if args.no_window else "auto")
         lens = (args.prompt_len, max(8, args.prompt_len // 2),
                 max(8, args.prompt_len - 7), max(8, args.prompt_len // 3))
         for i in range(2 * args.batch):

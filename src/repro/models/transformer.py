@@ -817,9 +817,30 @@ class Model:
 
     # -- decode ---------------------------------------------------------------
 
-    def decode_step(self, params, state: DecodeState, token: jax.Array
+    def decode_step(self, params, state: DecodeState, token: jax.Array,
+                    window: Optional[int] = None
                     ) -> Tuple[jax.Array, DecodeState]:
-        """token: [B] int32 → (logits [B,V], state)."""
+        """token: [B] int32 → (logits [B,V], state).
+
+        `window` (STATIC int, optional) runs the whole step — CAM scoring,
+        selection, gather, exact attention, charge-domain accumulation,
+        and the token write — over the `[:window]` slot prefix of every
+        layer's cache, then merges the prefix back. Live slots are always
+        a fill prefix (see `core/cache.slot_window`), so a window covering
+        `max(fill) + 1` is bit-identical to the full-width step while
+        paying O(window) instead of O(slots) per layer. Callers quantize
+        the window to powers of two (`core/cache.decode_window`) so the
+        jit cache gains at most log2(slots) windowed programs."""
+        if (window is not None and state.kv is not None
+                and window < state.kv.k.shape[-2]):
+            win = state._replace(kv=kvcache.slot_window(state.kv, window))
+            logits, win = self._decode_step_full(params, win, token)
+            return logits, win._replace(
+                kv=kvcache.slot_window_merge(state.kv, win.kv))
+        return self._decode_step_full(params, state, token)
+
+    def _decode_step_full(self, params, state: DecodeState, token: jax.Array
+                          ) -> Tuple[jax.Array, DecodeState]:
         cfg = self.cfg
         prune = self.prune
         x = params["embed"][token].astype(_dtype(cfg.compute_dtype))

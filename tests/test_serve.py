@@ -692,6 +692,66 @@ def test_scanned_sampling_temperature_topk(setup):
     assert serve(0.7, 1) == greedy
 
 
+def test_backdated_submit_preserves_global_fifo(setup):
+    """A submit whose arrival predates requests ALREADY drained into the
+    per-bucket deques must still take its arrival-rank place (the global
+    FIFO head / aging bound protect the true oldest request), while an
+    equal-arrival submit keeps FIFO-among-ties (after the drained one)."""
+    import time as _time
+    cfg, model, params = setup
+    loop = ServeLoop(model, params, lanes=1, eos=-1, block=2)
+    ra = loop.submit(_prompt(cfg, 10, seed=1), max_new=2, arrival=0.0)
+    loop._t0 = _time.monotonic()
+    loop._drain_arrivals(loop._now())          # A is now in its deque
+    rb = loop.submit(_prompt(cfg, 12, seed=2), max_new=2, arrival=0.0)
+    rc = loop.submit(_prompt(cfg, 11, seed=3), max_new=2, arrival=-1.0)
+    assert [r.rid for r in loop.queue] == [rc, ra, rb]  # arrival order
+    done = {s.rid: s for s in loop.run()}
+    assert (done[rc].admit_seq < done[ra].admit_seq
+            < done[rb].admit_seq)
+
+
+def test_serve_window_arg_validated(setup):
+    """window must be 'auto' or None — anything else (a typo, an int)
+    would silently disable windowing, so it is rejected up front."""
+    cfg, model, params = setup
+    with pytest.raises(AssertionError):
+        ServeLoop(model, params, lanes=1, window=256)
+    with pytest.raises(AssertionError):
+        ServeLoop(model, params, lanes=1, window="Auto")
+
+
+def test_scanned_sampling_top_p(setup):
+    """top-p (nucleus) sampling in the scanned decode block + admission
+    seed: keyed like temperature/top_k, reproducible per seed, a
+    vanishing nucleus degenerates to greedy, and top_p=0 (disabled) is
+    exactly the plain-sampling stream."""
+    cfg, model, params = setup
+
+    def serve(temperature, top_p, seed=0, top_k=0):
+        loop = ServeLoop(model, params, lanes=2, eos=-1, block=4,
+                         temperature=temperature, top_k=top_k,
+                         top_p=top_p, sample_seed=seed)
+        rids = [loop.submit(_prompt(cfg, 24, seed=21), max_new=6),
+                loop.submit(_prompt(cfg, 30, seed=22), max_new=4)]
+        done = {s.rid: s for s in loop.run()}
+        return [done[r].tokens for r in rids]
+
+    t1 = serve(1.0, 0.8)
+    assert t1 == serve(1.0, 0.8)               # same seed → same stream
+    assert [len(t) for t in t1] == [6, 4]      # budgets honoured
+    assert serve(1.0, 0.8, seed=9) != t1       # a new seed moves it
+    greedy = serve(0.0, 0.0)
+    # nucleus of vanishing mass keeps only the argmax token per step
+    assert serve(0.9, 1e-6) == greedy
+    # top_p outside (0, 1) disables truncation entirely: 0.0 and 1.0
+    # draw the identical (untruncated) stream from the same seed
+    assert serve(1.0, 0.0) == serve(1.0, 1.0)
+    # composes with top_k (top_k truncates first)
+    tk = serve(1.0, 0.9, top_k=5)
+    assert tk == serve(1.0, 0.9, top_k=5)
+
+
 def test_greedy_generate_sampling_default_key(setup):
     """temperature > 0 with the default key=None must sample, not crash
     (jax.random.split(None) regression)."""
