@@ -15,7 +15,13 @@ Throughput-style keys (``*tok_s*``) warn when the fresh value drops below
 admission/bucketing/windowing regression, not noise); latency-style keys
 (``*_us*``, lower is better) warn when the fresh value exceeds
 ``1/TOL`` of the baseline; ratio-style keys (``*speedup*`` /
-``*reduction*``, higher is better) warn like throughput. Everything else
+``*reduction*``, higher is better) warn like throughput. Prefix-cache
+keys are higher-better and matched BEFORE the generic count rule:
+share-style keys (``*hit_rate*`` / ``*dedup*``, deterministic fractions
+of admissions served from cache) and reuse-count keys
+(``*copies*`` / ``*tokens_reused*`` / ``*_hits*``) warn when the fresh
+value drops below the baseline — fewer cache hits on identical traffic
+means the admission path stopped consulting or populating the trie. Everything else
 — including the string-valued decision records (``fused_auto_*``) — is
 informational. The exit code is always 0: shared CI runners are far too
 noisy for a hard wall-clock gate, so this is a trajectory tripwire, not
@@ -33,6 +39,12 @@ TOL = 0.7        # throughput may dip to 70% of baseline before warning
 def classify(key: str) -> str:
     if "tok_s" in key:
         return "throughput"
+    # prefix-cache reuse keys are HIGHER-better; they must outrank the
+    # generic lower-better count rule (e.g. "copies" are not dispatches)
+    if "hit_rate" in key or "dedup" in key:
+        return "share"
+    if "copies" in key or "tokens_reused" in key or key.endswith("_hits"):
+        return "reuse"
     if "compile" in key or "dispatch" in key or "windows" in key:
         return "count"
     if "speedup" in key or "reduction" in key:
@@ -67,6 +79,11 @@ def compare(baseline: dict, fresh: dict) -> list:
             out.append(("warning",
                         f"{key}: {cur:.2f} < {TOL:.0%} of committed "
                         f"baseline ratio {base:.2f}"))
+        elif kind in ("share", "reuse") and cur < base:
+            out.append(("warning",
+                        f"{key}: {cur:g} below committed baseline {base:g} "
+                        f"(prefix-cache reuse regression — identical "
+                        f"traffic should hit at least as often)"))
         else:
             out.append(("notice", f"{key}: {base:g} -> {cur:g}"))
     for key in sorted(set(baseline) - set(fresh)):

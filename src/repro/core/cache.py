@@ -10,10 +10,11 @@ and scan over it.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import PruneConfig
 from repro.core import quant
@@ -242,6 +243,72 @@ def decode_window(max_fill: int, steps: int, slots: int,
     if w % nb or prune.select_k % nb:
         return None
     return None if w >= slots else w
+
+
+# ---------------------------------------------------------------------------
+# Prefix snapshots — prefix-sharing admission support.
+#
+# `prefill_fill` scatters the static top-k winners into the slot prefix, so
+# a finalized cache generally holds a position-scattered SUBSET of the
+# prompt — useless as a donor for a longer prompt that shares the prefix.
+# But when nothing was pruned (prompt no longer than the keep budget) the
+# layout is the identity: slot i holds token i in order, `acc` is the raw
+# accumulated column sums, and rows [0, length) ARE the pre-pruning
+# workspace a chunked prefill would stream — i.e. a valid resume donor
+# (`Model.resume_prefill_chunk_state`). These host-side helpers detect that
+# alignment and extract the rows; the serving engine's prefix cache uses
+# them to turn completed whole-bucket prefills into radix-trie donors
+# (`launch/prefix_cache.py`). int8 caches are never slot-aligned donors:
+# quantization at finalize is lossy, so the raw rows are unrecoverable —
+# their donors come from pre-quantization workspace snapshots instead.
+# ---------------------------------------------------------------------------
+
+
+def prefix_slot_aligned(kv: KVCache, length: int) -> bool:
+    """True when rows [0, length) of a finalized cache are the raw prompt
+    K/V in original token order — static pruning kept everything, so the
+    slot layout is the identity over the prefix.
+
+    Host-side check over a batch-1 cache (single-layer [1, Hk, S, ·] or
+    layer-stacked [L, 1, Hk, S, ·]): every lane/layer must have
+    fill == step == length, positions 0..length-1 in order, a fully valid
+    prefix, and full-precision storage (int8 rows are quantized in place
+    and unrecoverable)."""
+    if kv.quantized_kv or kv.v is None:
+        return False
+    if length <= 0 or length > kv.slots:
+        return False
+    fill = np.asarray(kv.fill)
+    step = np.asarray(kv.step)
+    if not ((fill == length).all() and (step == length).all()):
+        return False
+    pos = np.asarray(kv.pos)[..., :length]
+    if not (pos == np.arange(length, dtype=pos.dtype)).all():
+        return False
+    return bool(np.asarray(kv.valid)[..., :length].all())
+
+
+def cache_prefix_rows(kv: KVCache, length: int
+                      ) -> Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+    """Extract (k, v, acc) rows [0, length) of a slot-aligned finalized
+    batch-1 layer-stacked cache as host arrays ([L, Hk, length, ·] /
+    [L, Hk, length]), or None when the prefix is not slot-aligned (static
+    pruning rewrote it, or the cache is quantized/latent).
+
+    The returned rows equal the pre-pruning chunked-prefill workspace for
+    the same tokens — `prefill_fill` stores the RAW accumulated scores and
+    gathers with an identity index map when nothing is evicted — so they
+    can seed `Model.resume_prefill_chunk_state`. K/V rows match bit-for-
+    bit unconditionally; the f32 `acc` sums match bit-for-bit when the
+    donor prefill's query-chunk grid equals the resume chunk size (the
+    engine pins `chunk_prefill == cfg.attn_chunk` for that; any other
+    pairing agrees to float-association noise)."""
+    if not prefix_slot_aligned(kv, length):
+        return None
+    k = np.asarray(kv.k)[:, 0, :, :length]
+    v = np.asarray(kv.v)[:, 0, :, :length]
+    acc = np.asarray(kv.acc)[:, 0, :, :length]
+    return k, v, acc
 
 
 def protected_mask(cache: KVCache, prune: PruneConfig) -> jax.Array:

@@ -22,6 +22,17 @@ the fixed-budget cache (the paper's point) stays busy under realistic
 mixed traffic. This is the paper's target regime: memory-bound
 autoregressive decoding where per-token Python dispatch otherwise
 dominates the step time.
+
+Requests enter through the keyword-only `Request` dataclass
+(`submit(Request(prompt=..., max_new=...)) -> RequestHandle`); the
+positional `submit(prompt, max_new, arrival)` shim and the all-lanes
+`admit()`/`step()`/`step_block()` surface survive with a
+`DeprecationWarning`, routed through the same internals. With
+`prefix_cache_bytes > 0` admission consults a host-side radix-trie
+prefix cache (`launch/prefix_cache.py`): exact-prompt hits splice the
+cached finalized state straight into a lane, and shared-prefix hits
+resume the sliced prefill from cached pre-pruning workspace rows —
+bit-identical to prefilling the whole prompt from scratch.
 """
 from __future__ import annotations
 
@@ -30,6 +41,7 @@ import dataclasses
 import functools
 import math
 import time
+import warnings
 from collections import deque
 from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -39,8 +51,10 @@ import numpy as np
 
 from repro.configs.base import get_config, reduced
 from repro.core import baselines
-from repro.models.transformer import (Model, lane_insert, lane_select,
-                                      lanes_insert)
+from repro.launch.prefix_cache import PrefixCache, RowsEntry, StateEntry
+from repro.models.transformer import Model
+from repro.surgery import (cache_prefix_rows, state_lane_insert,
+                           state_lane_select, state_lanes_insert)
 
 
 # ---------------------------------------------------------------------------
@@ -195,7 +209,7 @@ def decode_block_masked(model: Model, params, state, tok, active, rem,
         state, tok, active, rem, key = carry
         logits, new_state = model.decode_step(params, state, tok,
                                               window=window)
-        state = lane_select(active, new_state, state)
+        state = state_lane_select(active, new_state, state)
         live = active & (rem > 0)      # robust to active lanes w/o budget
         emit = live & (tok != eos)
         rem = rem - emit.astype(rem.dtype)
@@ -294,6 +308,14 @@ def _prefill_finalize_fn(key):
                    donate_argnums=_donate_argnums(1))
 
 
+@functools.lru_cache(maxsize=32)
+def _resume_chunk_fn(key):
+    # one program per (donor depth, workspace width) pair — both shape
+    # axes are bounded by the bucket grid over the chunk grid
+    return jax.jit(_rebuild(*key).resume_prefill_chunk_state,
+                   static_argnums=(3,))
+
+
 def _jit_decode_block(model: Model, steps: int):
     return _block_fn(_model_key(model), steps)
 
@@ -305,7 +327,7 @@ def _admit_lane_state(state, tok, lane, fresh, logits, key,
     first token from the prefill logits — via the engine's next-token
     rule, so sampling covers the FIRST generated token too, not just the
     scanned steps (state/tok donated in place; key unused when greedy)."""
-    state = lane_insert(state, lane, fresh)
+    state = state_lane_insert(state, lane, fresh)
     seed = _next_token(logits, key, temperature, top_k, top_p)
     tok = tok.at[lane].set(seed.astype(tok.dtype))
     return state, tok
@@ -328,7 +350,7 @@ def _admit_group_state(state, tok, src, fresh, logits, key,
     of the group-prefill logits (sampled per row when temperature > 0).
     `src` maps live lane -> fresh row (-1 = lane untouched); state/tok
     donated in place."""
-    state = lanes_insert(state, src, fresh)
+    state = state_lanes_insert(state, src, fresh)
     seeded = _next_token(logits, key, temperature, top_k, top_p)   # [G]
     picked = jnp.take(seeded.astype(tok.dtype), jnp.maximum(src, 0))
     tok = jnp.where(src >= 0, picked, tok)
@@ -360,19 +382,70 @@ def generate_scan(model: Model, params, batch, steps: int):
 # ---------------------------------------------------------------------------
 
 
-@dataclasses.dataclass(eq=False)
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling override (same knobs as the loop-level
+    `temperature`/`top_k`/`top_p`). Applied to the request's FIRST
+    generated token — the admission-seeding dispatch is per-request, so
+    it can honour arbitrary overrides — while the scanned decode block
+    keeps the engine-wide knobs (one compiled program serves all lanes;
+    a per-lane sampler in the scan would multiply the jit cache).
+    Requests carrying an override are admitted solo, never grouped."""
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 0.0
+
+
+@dataclasses.dataclass(eq=False, kw_only=True)
 class Request:
-    """One generation request. `arrival` is seconds from `run()` start
-    (0 = already waiting); `submit()` keeps the queue arrival-ordered.
-    Identity-compared (eq=False): the scheduler removes grouped requests
-    from the queue by identity, and field equality over an ndarray prompt
-    is ill-defined anyway."""
-    rid: int
+    """One generation request (keyword-only; `submit()` assigns `rid`).
+
+    `arrival` is seconds from `run()` start (0 = already waiting);
+    `submit()` keeps the queue arrival-ordered. `sampling` overrides the
+    loop's sampling knobs for this request's seeded first token;
+    `sample_seed` pins its PRNG stream (both force solo admission).
+    `reuse_prefix=False` opts the request out of the prefix cache in
+    both directions: its admission never matches a cached prefix and its
+    prefill is never inserted as a donor. Identity-compared (eq=False):
+    the scheduler removes grouped requests from the queue by identity,
+    and field equality over an ndarray prompt is ill-defined anyway."""
     prompt: np.ndarray
-    max_new: int
+    max_new: Optional[int] = None        # None → the loop's default
     arrival: float = 0.0
+    sample_seed: Optional[int] = None
+    sampling: Optional[SamplingParams] = None
+    reuse_prefix: bool = True
+    # engine-assigned fields — never pass these to the constructor
+    rid: int = -1
     bucket: int = 0            # memoized pad width under the loop's grid
     admitted: bool = False     # lazy-prune marker for the FIFO-order deque
+
+
+class RequestHandle:
+    """Ticket returned by `ServeLoop.submit(Request(...))`: a live view
+    onto one request's progress (`done`, `tokens`, `stats`) without
+    holding any engine state of its own."""
+    __slots__ = ("rid", "_loop")
+
+    def __init__(self, loop: "ServeLoop", rid: int):
+        self.rid = rid
+        self._loop = loop
+
+    @property
+    def stats(self) -> "RequestStats":
+        return self._loop.stats[self.rid]
+
+    @property
+    def done(self) -> bool:
+        return self.rid in self._loop._finished
+
+    @property
+    def tokens(self) -> List[int]:
+        """Generated token ids so far (complete once `done`)."""
+        return list(self.stats.tokens)
+
+    def __repr__(self) -> str:
+        return f"RequestHandle(rid={self.rid}, done={self.done})"
 
 
 @dataclasses.dataclass
@@ -394,6 +467,8 @@ class RequestStats:
     prefill_chunks: int = 1    # dispatches the prefill was sliced into
     admit_seq: int = -1        # admission order (0 = admitted first)
     group_size: int = 1        # requests sharing this admission dispatch
+    prefix_tokens: int = 0     # prompt tokens served from the prefix cache
+    prefix_exact: bool = False  # whole prompt hit (state splice, no prefill)
 
     @property
     def latency(self) -> float:
@@ -420,6 +495,14 @@ class _ChunkedPrefill:
     n_chunks: int
     next_chunk: int = 0
     x_last: Any = None         # final-stack hidden of the latest chunk
+    base: int = 0              # rows [0, base) came from a prefix-cache donor
+    collect: bool = False      # snapshot chunk boundaries for the trie
+    # (boundary q, host acc[:, :, :q]) — acc is only valid at its exact
+    # boundary (each column keeps absorbing mass from later query rows),
+    # so every boundary stores its own full-prefix copy; K/V rows are
+    # write-once, so ONE workspace snapshot at finalize covers them all
+    snap_acc: List[Tuple[int, np.ndarray]] = dataclasses.field(
+        default_factory=list)
 
 
 class ServeLoop:
@@ -428,14 +511,40 @@ class ServeLoop:
     New-style use::
 
         loop = ServeLoop(model, params, lanes=4, eos=2, block=8)
-        loop.submit(prompt_a, max_new=64)     # any prompt length ≤ max
-        loop.submit(prompt_b, max_new=16)
+        h_a = loop.submit(Request(prompt=prompt_a, max_new=64))
+        h_b = loop.submit(Request(prompt=prompt_b, max_new=16,
+                                  sampling=SamplingParams(temperature=0.7),
+                                  sample_seed=7))
         stats = loop.run()                    # List[RequestStats]
+        h_a.done, h_a.tokens                  # per-request progress view
 
     Lanes are freed on EOS/budget **in-device** and refilled from the
-    queue mid-flight. The legacy all-lanes API (`admit(prompts)` +
-    `step()`/`step_block()`) drives the same engine with a single
-    full-batch prefill.
+    queue mid-flight. The positional `submit(prompt, max_new, arrival)`
+    shim and the legacy all-lanes API (`admit(prompts)` +
+    `step()`/`step_block()`) survive with a `DeprecationWarning` and
+    drive the same engine (the legacy admit does a single full-batch
+    prefill).
+
+    **Prefix caching** (`prefix_cache_bytes > 0`). Admission consults a
+    host-side radix-trie prefix cache (`launch/prefix_cache.py`) before
+    touching the device. An exact-prompt hit splices the cached
+    finalized DecodeState straight into the free lane — zero prefill
+    dispatches, any policy/dtype. A shared-prefix hit (chunked-prefill
+    path only) copies cached PRE-pruning workspace rows into a fresh
+    chunk workspace (`Model.resume_prefill_chunk_state`) and dispatches
+    only the suffix slices; because those rows/column-sums depend only
+    on the shared tokens, the result is BIT-IDENTICAL to prefilling the
+    whole prompt from scratch — for bf16 and int8 caches alike (the
+    snapshot predates quantization and the slot rewrite). Completed
+    prefills are inserted back: the finalized state always, plus
+    per-chunk-boundary rows donors along the sliced path, and a rows
+    donor derived from a finalized state when the static pruning left it
+    slot-aligned (`surgery.cache_prefix_rows`) — a pruned layout is
+    refused (its rows are a position-scattered subset, not the raw
+    prefix). Eviction is LRU under the byte budget. Per-request opt-out:
+    `Request(reuse_prefix=False)`. The `counters` dict tracks
+    lookups/hits/copies/tokens-reused; `aggregate()` adds
+    `prefix_hit_rate` and `prefix_dedup_ratio`.
 
     **Grouped admission (default).** At each admission point the
     scheduler collects every already-arrived queue request that pads to
@@ -535,7 +644,8 @@ class ServeLoop:
                  max_head_skips: int = 8,
                  temperature: float = 0.0, top_k: int = 0,
                  top_p: float = 0.0, sample_seed: int = 0,
-                 window: Union[str, None] = "auto"):
+                 window: Union[str, None] = "auto",
+                 prefix_cache_bytes: int = 0):
         self.model = model
         self.params = params
         self.lanes = lanes
@@ -565,6 +675,7 @@ class ServeLoop:
         self._prefill_group = _prefill_group_fn(_model_key(model))
         self._chunk = _prefill_chunk_fn(_model_key(model))
         self._finalize = _prefill_finalize_fn(_model_key(model))
+        self._resume = _resume_chunk_fn(_model_key(model))
         self.state = None
         self.tok = None
         self.active = np.zeros(lanes, bool)
@@ -588,6 +699,18 @@ class ServeLoop:
         self._pending: Optional[_ChunkedPrefill] = None
         self._prefill_shapes: set = set()     # (kind, width) seen this loop
         self._admit_seq = 0
+        self._finished: set = set()           # rids with t_done recorded
+        self.prefix_cache: Optional[PrefixCache] = (
+            PrefixCache(prefix_cache_bytes) if prefix_cache_bytes > 0
+            else None)
+        # suffix-resume (rows) donors ride the chunked-prefill path; the
+        # resume grid must equal the donor prefill's accumulation grid
+        # for the f32 column sums to match bit-for-bit, and finalized
+        # states whose acc came from a whole-bucket prefill accumulate
+        # on cfg.attn_chunk — so derive rows from them only when the
+        # loop's chunk size IS cfg.attn_chunk
+        self._rows_reuse = (self.prefix_cache is not None
+                            and self.chunk_prefill > 0)
         # dispatch accounting: how many device calls each stage issued
         # (prefill_dispatches counts whole-prompt/group prefills and
         # chunked finalizes; chunk slices are tallied separately)
@@ -596,6 +719,10 @@ class ServeLoop:
             "chunk_dispatches": 0, "decode_blocks": 0,
             "grouped_admissions": 0, "grouped_requests": 0,
             "decode_windows": 0,
+            "prefix_lookups": 0, "prefix_hits": 0,
+            "prefix_exact_hits": 0, "prefix_copies": 0,
+            "prefix_tokens_reused": 0,
+            "prefix_inserts": 0, "prefix_evictions": 0,
         }
 
     # -- time ----------------------------------------------------------------
@@ -605,14 +732,38 @@ class ServeLoop:
 
     # -- request intake ------------------------------------------------------
 
-    def submit(self, prompt, max_new: Optional[int] = None,
-               arrival: float = 0.0) -> int:
-        """Queue one request; returns its rid. Prompt: [t] token ids."""
-        rid = self._next_rid
+    def submit(self, request, max_new: Optional[int] = None,
+               arrival: float = 0.0):
+        """Queue one request.
+
+        New style: ``submit(Request(prompt=..., max_new=...)) ->
+        RequestHandle``. The positional form ``submit(prompt, max_new,
+        arrival) -> rid`` is deprecated (it predates the Request
+        dataclass being public API) and warns."""
+        if isinstance(request, Request):
+            if max_new is not None or arrival != 0.0:
+                raise TypeError(
+                    "submit(Request(...)) takes no extra arguments — set "
+                    "max_new/arrival on the Request")
+            return self._enqueue(request)
+        warnings.warn(
+            "submit(prompt, max_new, arrival) is deprecated; pass "
+            "submit(Request(prompt=..., max_new=..., arrival=...)) and "
+            "use the returned RequestHandle",
+            DeprecationWarning, stacklevel=2)
+        req = Request(prompt=np.asarray(request), max_new=max_new,
+                      arrival=float(arrival))
+        return self._enqueue(req).rid
+
+    def _enqueue(self, req: Request) -> RequestHandle:
+        if req.rid >= 0:
+            raise ValueError(f"Request already submitted (rid={req.rid})")
+        req.prompt = np.asarray(req.prompt)
+        if req.max_new is None:
+            req.max_new = self.max_new
+        req.rid = self._next_rid
         self._next_rid += 1
-        prompt = np.asarray(prompt)
-        req = Request(rid, prompt,
-                      self.max_new if max_new is None else max_new, arrival)
+        arrival = float(req.arrival)
         req.bucket = self._bucket_of(req)     # memoized for the scheduler
         if arrival < self._drained_hwm:
             # backdated submit landing AMONG already-drained requests:
@@ -628,9 +779,9 @@ class ServeLoop:
             self._arrivals.insert(idx, req)
         else:
             self._arrivals.append(req)
-        self.stats[rid] = RequestStats(rid, len(prompt), req.max_new,
-                                       t_arrival=arrival)
-        return rid
+        self.stats[req.rid] = RequestStats(req.rid, len(req.prompt),
+                                           req.max_new, t_arrival=arrival)
+        return RequestHandle(self, req.rid)
 
     def _insert_arrived(self, req: Request) -> None:
         """Insert at arrival rank (after ties) into the arrived deques."""
@@ -670,14 +821,27 @@ class ServeLoop:
             fifo.popleft()
         return fifo[0] if fifo else None
 
+    @staticmethod
+    def _needs_solo(req: Request) -> bool:
+        """Per-request sampling/seed overrides apply at the admission-
+        seeding dispatch, which is per-request — so such a request never
+        shares a grouped admission."""
+        return req.sampling is not None or req.sample_seed is not None
+
     def _take_bucket(self, bucket: int, n: int) -> List[Request]:
-        """Pop up to `n` FIFO requests from one bucket's deque."""
+        """Pop up to `n` FIFO requests from one bucket's deque; a request
+        carrying sampling overrides terminates (or solely forms) the
+        group so it is admitted through its own seeding dispatch."""
         dq = self._bucket_q.get(bucket)
         group: List[Request] = []
         while dq and len(group) < n:
+            if group and self._needs_solo(dq[0]):
+                break
             req = dq.popleft()
             req.admitted = True
             group.append(req)
+            if self._needs_solo(req):
+                break
         if dq is not None and not dq:
             del self._bucket_q[bucket]
         self._arrived_count -= len(group)
@@ -707,8 +871,14 @@ class ServeLoop:
         return bucket_length(len(req.prompt), grid)
 
     def _admit_lane(self, lane: int, req: Request):
-        """Prefill one request (whole-bucket) and splice it into `lane`."""
+        """Prefill one request (whole-bucket) and splice it into `lane`.
+        Consults the prefix cache for an exact-prompt hit first, and
+        inserts the finished prefill back as a donor."""
         self._ensure_state()
+        hit, _ = self._cache_match(req, rows_cap=None)
+        if hit is not None:
+            self._splice_cached(lane, req, hit)
+            return
         padded, bucket = self._padded_prompt(req)
         if bucket == len(req.prompt) and self.buckets is None:
             self._prefill_shapes.add(("exact", bucket))
@@ -720,6 +890,7 @@ class ServeLoop:
                 jnp.asarray(len(req.prompt), jnp.int32))
         self.counters["prefill_dispatches"] += 1
         self._splice(lane, req, logits, fresh, bucket=bucket)
+        self._cache_insert_finalized(req, logits, fresh, bucket)
 
     def _sample_key(self):
         """Fresh subkey for an admission seed when sampling; when greedy
@@ -730,15 +901,108 @@ class ServeLoop:
         self._key, sub = jax.random.split(self._key)
         return sub
 
+    def _req_sampling(self, req: Request) -> Tuple[float, int, float]:
+        """(temperature, top_k, top_p) for this request's seeded first
+        token: its SamplingParams override, else the loop knobs."""
+        sp = req.sampling
+        if sp is None:
+            return self.temperature, self.top_k, self.top_p
+        return float(sp.temperature), int(sp.top_k), float(sp.top_p)
+
+    def _seed_key(self, req: Request):
+        """PRNG key for one request's admission seed: a pinned stream
+        when `sample_seed` is set, else the loop stream (advanced only
+        when the effective temperature actually samples)."""
+        if req.sample_seed is not None:
+            return jax.random.PRNGKey(req.sample_seed)
+        if self._req_sampling(req)[0] <= 0:
+            return self._key
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
     def _splice(self, lane: int, req: Request, logits, fresh,
-                bucket: int, prefill_chunks: int = 1):
+                bucket: int, prefill_chunks: int = 1,
+                prefix_tokens: int = 0):
         """Insert a freshly prefilled batch-1 state into a free lane."""
-        self.state, self.tok = _admit_fn(
-            self.temperature, self.top_k, self.top_p)(
-            self.state, self.tok, lane, fresh, logits, self._sample_key())
+        t, k, p = self._req_sampling(req)
+        self.state, self.tok = _admit_fn(t, k, p)(
+            self.state, self.tok, lane, fresh, logits, self._seed_key(req))
         self.counters["admit_dispatches"] += 1
         self._register_admit(lane, req, bucket=bucket,
-                             prefill_chunks=prefill_chunks)
+                             prefill_chunks=prefill_chunks,
+                             prefix_tokens=prefix_tokens)
+
+    # -- prefix cache --------------------------------------------------------
+
+    def _cache_match(self, req: Request, rows_cap: Optional[int]
+                     ) -> Tuple[Optional[StateEntry], Optional[RowsEntry]]:
+        """One admission-time lookup: (exact-state hit, rows donor) —
+        at most one is non-None. `rows_cap` bounds the usable donor depth
+        (the deepest chunk boundary strictly inside the prompt); None
+        skips the rows search (whole-bucket path)."""
+        pc = self.prefix_cache
+        if pc is None or not req.reuse_prefix:
+            return None, None
+        self.counters["prefix_lookups"] += 1
+        st = pc.match_state(req.prompt)
+        if st is not None:
+            self.counters["prefix_hits"] += 1
+            self.counters["prefix_exact_hits"] += 1
+            return st, None
+        if rows_cap is not None and rows_cap >= self.chunk_prefill:
+            rows = pc.match_rows(req.prompt, rows_cap)
+            if rows is not None:
+                self.counters["prefix_hits"] += 1
+                return None, rows
+        return None, None
+
+    def _splice_cached(self, lane: int, req: Request, entry: StateEntry):
+        """Admit from an exact-prompt hit: splice the cached finalized
+        state straight into `lane` — zero prefill dispatches. The cached
+        logits seed the first token through the request's sampling rule,
+        so a greedy twin of the original request reproduces its stream."""
+        fresh = jax.tree.map(jnp.asarray, entry.state)
+        t, k, p = self._req_sampling(req)
+        self.state, self.tok = _admit_fn(t, k, p)(
+            self.state, self.tok, lane, fresh, jnp.asarray(entry.logits),
+            self._seed_key(req))
+        self.counters["admit_dispatches"] += 1
+        self.counters["prefix_copies"] += 1
+        self.counters["prefix_tokens_reused"] += entry.length
+        self._register_admit(lane, req, bucket=entry.bucket,
+                             prefill_chunks=0, prefix_tokens=entry.length,
+                             prefix_exact=True)
+
+    def _sync_cache_counters(self):
+        pc = self.prefix_cache
+        self.counters["prefix_inserts"] = pc.inserts
+        self.counters["prefix_evictions"] = pc.evictions
+
+    def _cache_insert_finalized(self, req: Request, logits, fresh,
+                                bucket: int):
+        """Insert a completed whole-bucket prefill into the trie: the
+        finalized state always; additionally a rows donor when the
+        static pruning left the prefix slot-aligned (nothing evicted,
+        identity positions, full precision), the prompt length sits on
+        the resume chunk grid, and that grid equals the donor's
+        accumulation grid (cfg.attn_chunk) so the f32 column sums carry
+        the exact from-scratch accumulation order."""
+        pc = self.prefix_cache
+        if pc is None or not req.reuse_prefix:
+            return
+        host_state = jax.tree.map(np.asarray, fresh)
+        pc.insert_state(req.prompt, StateEntry(
+            length=len(req.prompt), bucket=bucket,
+            logits=np.asarray(logits), state=host_state))
+        c = self.chunk_prefill
+        n = len(req.prompt)
+        if (self._rows_reuse and n % c == 0
+                and c == self.model.cfg.attn_chunk
+                and getattr(host_state, "kv", None) is not None):
+            rows = cache_prefix_rows(host_state.kv, n)
+            if rows is not None:
+                pc.insert_rows(req.prompt, RowsEntry(n, *rows))
+        self._sync_cache_counters()
 
     def _admit_group(self, lanes: List[int], group: List[Request]):
         """Admit G same-bucket requests with ONE batched prefill dispatch
@@ -785,7 +1049,8 @@ class ServeLoop:
             self._register_admit(lane, req, bucket=bucket, group_size=g)
 
     def _register_admit(self, lane: int, req: Request, bucket: int,
-                        prefill_chunks: int = 1, group_size: int = 1):
+                        prefill_chunks: int = 1, group_size: int = 1,
+                        prefix_tokens: int = 0, prefix_exact: bool = False):
         """Host-side bookkeeping for a request just spliced into `lane`."""
         self.active[lane] = req.max_new > 0
         self.remaining[lane] = max(req.max_new, 0)
@@ -798,6 +1063,8 @@ class ServeLoop:
         st.prefill_chunks = prefill_chunks
         st.admit_seq = self._admit_seq
         st.group_size = group_size
+        st.prefix_tokens = prefix_tokens
+        st.prefix_exact = prefix_exact
         self._admit_seq += 1
         if req.max_new <= 0:                   # prefill-only request
             st.t_first = st.t_admit            # ttft == prefill completion
@@ -817,18 +1084,39 @@ class ServeLoop:
         The workspace is rounded up to a multiple of the chunk size so
         every dispatched slice is full-width: a ragged final slice would
         silently compile one extra program per distinct ragged width (the
-        true-length mask makes the extra pad columns free)."""
+        true-length mask makes the extra pad columns free).
+
+        Prefix cache: an exact-prompt hit splices the cached finalized
+        state directly (no slices, no reserved pending prefill); a rows
+        hit at depth p pre-fills the workspace with the cached rows and
+        resumes at chunk p/C — the remaining slices repeat the
+        from-scratch accumulation bit-for-bit."""
         self._ensure_state()
         c = self.chunk_prefill
+        # deepest usable donor boundary: the final chunk (the one holding
+        # the last real token, whose hidden feeds the logits) always runs
+        cap = ((len(req.prompt) - 1) // c) * c
+        hit, rows = self._cache_match(req, rows_cap=cap)
+        if hit is not None:
+            self._splice_cached(lane, req, hit)
+            return
         ws = math.ceil(bucket / c) * c
         if ws != bucket:
             ext = np.zeros(ws, padded.dtype)
             ext[:len(padded)] = padded
             padded = ext
+        if rows is not None:
+            pstate = self._resume(rows.k, rows.v, rows.acc, ws)
+            base = rows.depth
+            self.counters["prefix_copies"] += 1
+            self.counters["prefix_tokens_reused"] += base
+        else:
+            pstate = self.model.init_prefill_chunk_state(1, ws)
+            base = 0
         self._pending = _ChunkedPrefill(
-            req=req, lane=lane, bucket=ws, padded=padded,
-            pstate=self.model.init_prefill_chunk_state(1, ws),
-            n_chunks=math.ceil(len(req.prompt) / c))
+            req=req, lane=lane, bucket=ws, padded=padded, pstate=pstate,
+            n_chunks=math.ceil(len(req.prompt) / c), next_chunk=base // c,
+            base=base, collect=(self._rows_reuse and req.reuse_prefix))
         self._prefill_shapes.add(("chunk", c, ws))
 
     def _advance_chunked(self) -> bool:
@@ -847,15 +1135,57 @@ class ServeLoop:
                                          length)
         self.counters["chunk_dispatches"] += 1
         p.next_chunk += 1
+        q = p.next_chunk * c
+        if p.collect and p.base < q <= (len(p.req.prompt) // c) * c:
+            # host snapshot of the acc prefix at boundary q: acc columns
+            # [0, q) depend only on tokens [0, q) (columns past a chunk's
+            # causal reach carry exactly-zero mass), so together with the
+            # write-once K/V rows this is a bit-exact resume donor for
+            # ANY continuation sharing those tokens. Boundaries whose
+            # chunk holds pad tokens (q > prompt length) are never taken.
+            p.snap_acc.append((q, np.asarray(p.pstate.acc[:, 0, :, :q])))
         if p.next_chunk >= p.n_chunks:
+            rows_kv = None
+            if p.snap_acc:
+                # ONE workspace K/V snapshot covers every boundary (rows
+                # are write-once) — taken before finalize donates pstate
+                q_max = p.snap_acc[-1][0]
+                rows_kv = (np.asarray(p.pstate.k[:, 0, :, :q_max]),
+                           np.asarray(p.pstate.v[:, 0, :, :q_max]))
             logits, fresh = self._finalize(
                 self.params, p.pstate, p.x_last,
                 jnp.asarray((p.n_chunks - 1) * c, jnp.int32), length)
             self.counters["prefill_dispatches"] += 1
             self._pending = None
             self._splice(p.lane, p.req, logits[0], fresh, bucket=p.bucket,
-                         prefill_chunks=p.n_chunks)
+                         prefill_chunks=p.n_chunks, prefix_tokens=p.base)
+            # trie insertion AFTER the splice: admission latency (ttft)
+            # never pays for the host copies; fresh/logits survive the
+            # splice (only state/tok are donated)
+            self._cache_insert_chunked(p, logits[0], fresh, rows_kv)
         return True
+
+    def _cache_insert_chunked(self, p: _ChunkedPrefill, logits, fresh,
+                              rows_kv):
+        """Insert a finished sliced prefill: the finalized state at the
+        full prompt, plus one rows donor per collected chunk boundary
+        (each boundary needs its own acc copy — columns keep absorbing
+        mass from later query rows, so acc is only valid at the exact
+        boundary it was snapped at)."""
+        pc = self.prefix_cache
+        if pc is None or not p.req.reuse_prefix:
+            return
+        tokens = np.asarray(p.req.prompt)
+        pc.insert_state(tokens, StateEntry(
+            length=len(tokens), bucket=p.bucket, logits=np.asarray(logits),
+            state=jax.tree.map(np.asarray, fresh)))
+        if rows_kv is not None:
+            k_all, v_all = rows_kv                     # [L, Hk, q_max, dh]
+            for q, acc_q in p.snap_acc:
+                pc.insert_rows(tokens[:q], RowsEntry(
+                    q, k_all[:, :, :q].copy(), v_all[:, :, :q].copy(),
+                    acc_q))
+        self._sync_cache_counters()
 
     def schedule(self) -> int:
         """Admit queued, already-arrived requests into free lanes.
@@ -940,9 +1270,14 @@ class ServeLoop:
         return n
 
     def admit(self, prompts: np.ndarray):
-        """Legacy all-lanes admission: prompts [lanes, prompt_len] are
-        prefilled in one batch (one compile, no lane splicing) and every
-        lane restarts with the shared `max_new` budget."""
+        """Deprecated legacy all-lanes admission: prompts
+        [lanes, prompt_len] are prefilled in one batch (one compile, no
+        lane splicing) and every lane restarts with the shared `max_new`
+        budget. Submit `Request`s and `run()` instead."""
+        warnings.warn(
+            "ServeLoop.admit() is deprecated; submit(Request(...)) per "
+            "request and drive with run()",
+            DeprecationWarning, stacklevel=2)
         if self._t0 is None:
             self._t0 = time.monotonic()
         batch = {"tokens": jnp.asarray(prompts)}
@@ -967,8 +1302,12 @@ class ServeLoop:
     # -- decode --------------------------------------------------------------
 
     def step(self) -> bool:
-        """One decode step over all lanes; returns True while any lane live."""
-        return self.step_block(1)
+        """Deprecated: one decode step over all lanes; returns True while
+        any lane is live. Drive the engine with `run()` instead."""
+        warnings.warn(
+            "ServeLoop.step() is deprecated; drive the engine with run()",
+            DeprecationWarning, stacklevel=2)
+        return self._step_block(1)
 
     def _decode_window(self, steps: int) -> Optional[int]:
         """Slot window for the next decode block: the smallest pow2 prefix
@@ -986,6 +1325,14 @@ class ServeLoop:
                              self.model.prune)
 
     def step_block(self, steps: int = 0) -> bool:
+        """Deprecated public alias of the engine's decode block; `run()`
+        drives the same internals without the warning."""
+        warnings.warn(
+            "ServeLoop.step_block() is deprecated; drive the engine with "
+            "run()", DeprecationWarning, stacklevel=2)
+        return self._step_block(steps)
+
+    def _step_block(self, steps: int = 0) -> bool:
         """Decode `steps` (default: self.block) tokens in one dispatch.
 
         Finished lanes stop writing in-device; the host side consumes the
@@ -1040,6 +1387,7 @@ class ServeLoop:
         st.occupancy = self._lane_occupancy(lane)
         self.completed.append(st)
         self.done.append(st.tokens)
+        self._finished.add(rid)
         self._lane_rid[lane] = None
 
     def _lane_occupancy(self, lane: int) -> float:
@@ -1063,7 +1411,7 @@ class ServeLoop:
             self.schedule()
             stepped = self._advance_chunked()
             if self.active.any():
-                self.step_block()
+                self._step_block()
             elif not stepped:
                 if not self._arrivals:  # e.g. a trailing prefill-only request
                     continue
@@ -1088,14 +1436,32 @@ class ServeLoop:
                 "jit_cache": int(jit_cache)}
 
     def aggregate(self) -> Dict[str, float]:
-        """Serving metrics over completed requests (+ dispatch counters)."""
+        """Serving metrics over completed requests (+ dispatch counters).
+
+        With a prefix cache enabled, adds `prefix_hit_rate`
+        (hits / admission lookups), `prefix_dedup_ratio` (prompt tokens
+        served from cache / prompt tokens of completed requests — the
+        fraction of prefill work deduplicated), and the trie's live
+        bytes/entries/insert/eviction tallies."""
         counters = {k: float(v) for k, v in self.counters.items()}
+        prefix: Dict[str, float] = {}
+        if self.prefix_cache is not None:
+            self._sync_cache_counters()
+            counters.update({k: float(v) for k, v in
+                             self.prefix_cache.stats().items()})
+            lookups = self.counters["prefix_lookups"]
+            prefix["prefix_hit_rate"] = (
+                self.counters["prefix_hits"] / lookups if lookups else 0.0)
+            prompt_toks = sum(s.prompt_len for s in self.completed)
+            prefix["prefix_dedup_ratio"] = (
+                sum(s.prefix_tokens for s in self.completed) / prompt_toks
+                if prompt_toks else 0.0)
         if not self.completed:
             return {"requests": 0.0, "tokens": 0.0, "wall_s": 0.0,
                     "tokens_per_s": 0.0, "mean_latency_s": 0.0,
                     "mean_occupancy": 0.0, "p50_ttft_s": 0.0,
                     "p99_ttft_s": 0.0, "prefill_programs": 0.0,
-                    **counters}
+                    **counters, **prefix}
         toks = sum(len(s.tokens) for s in self.completed)
         t_end = max(s.t_done for s in self.completed)
         t_begin = min(s.t_arrival for s in self.completed)
@@ -1114,6 +1480,7 @@ class ServeLoop:
             "p50_ttft_s": float(np.percentile(ttfts, 50)),
             "p99_ttft_s": float(np.percentile(ttfts, 99)),
             "prefill_programs": float(len(self._prefill_shapes)),
+            **prefix,
         }
 
 
@@ -1136,6 +1503,9 @@ def main(argv=None):
     ap.add_argument("--chunk-prefill", type=int, default=0,
                     help="slice prefills into this many tokens per "
                          "dispatch, interleaved with decode (--serve only)")
+    ap.add_argument("--prefix-cache", type=int, default=0, metavar="BYTES",
+                    help="radix-trie prefix cache byte budget (0 = off; "
+                         "--serve only)")
     ap.add_argument("--no-buckets", action="store_true",
                     help="legacy exact-length prefills (one compile per "
                          "distinct prompt length)")
@@ -1183,12 +1553,14 @@ def main(argv=None):
                          group_admit=not args.sequential_admit,
                          temperature=args.temperature, top_k=args.top_k,
                          top_p=args.top_p,
-                         window=None if args.no_window else "auto")
+                         window=None if args.no_window else "auto",
+                         prefix_cache_bytes=args.prefix_cache)
         lens = (args.prompt_len, max(8, args.prompt_len // 2),
                 max(8, args.prompt_len - 7), max(8, args.prompt_len // 3))
         for i in range(2 * args.batch):
-            loop.submit(rng.integers(0, cfg.vocab_size, lens[i % len(lens)]),
-                        max_new=args.new_tokens // (1 + i % 2))
+            loop.submit(Request(
+                prompt=rng.integers(0, cfg.vocab_size, lens[i % len(lens)]),
+                max_new=args.new_tokens // (1 + i % 2)))
         t0 = time.time()
         stats = loop.run()
         dt = time.time() - t0
@@ -1206,6 +1578,12 @@ def main(argv=None):
               f"{loop.counters['prefill_dispatches']} prefill + "
               f"{loop.counters['admit_dispatches']} admit dispatches, "
               f"{loop.counters['grouped_requests']} reqs group-admitted)")
+        if loop.prefix_cache is not None:
+            print(f"prefix cache: hit_rate={agg['prefix_hit_rate']:.2f} "
+                  f"dedup={agg['prefix_dedup_ratio']:.2f} "
+                  f"{int(agg['prefix_cache_bytes'])} bytes, "
+                  f"{int(agg['prefix_cache_entries'])} entries, "
+                  f"{loop.counters['prefix_evictions']} evictions")
         return
 
     prompts = rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len))

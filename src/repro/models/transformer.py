@@ -703,6 +703,34 @@ class Model:
                                  v=jnp.zeros(shape, dt),
                                  acc=jnp.zeros(shape[:4], jnp.float32))
 
+    def resume_prefill_chunk_state(self, k_rows, v_rows, acc_rows,
+                                   bucket: int) -> PrefillChunkState:
+        """Workspace for a suffix-only (prefix-cached) chunked prefill.
+
+        k_rows/v_rows: ``[L_attn, Hk, p, dh]`` host or device rows;
+        acc_rows: ``[L_attn, Hk, p]`` f32 accumulated column sums — the
+        state a from-scratch chunked prefill holds after its first
+        ``p / C`` chunks (see `launch/prefix_cache.RowsEntry`). Returns a
+        batch-1 `PrefillChunkState` over `bucket` with rows [0, p) filled
+        and the rest zero, ready for `prefill_chunk` calls starting at
+        row p. Because a chunk's workspace writes depend only on tokens
+        [0, row0 + C) — unwritten columns carry exactly-zero attention
+        mass — resuming here and finalizing is bit-identical to running
+        every chunk from row 0, for bf16 and int8 caches alike (the int8
+        mirrors quantize only at `prefill_finalize`). The donor's bucket
+        may differ from `bucket`: rows are bucket-width independent."""
+        assert self.supports_chunked_prefill(), self.cfg.family
+        pstate = self.init_prefill_chunk_state(1, bucket)
+        p = int(k_rows.shape[-2])
+        assert p <= bucket, (p, bucket)
+        k = pstate.k.at[:, :, :, :p].set(
+            jnp.asarray(k_rows, pstate.k.dtype)[:, None])
+        v = pstate.v.at[:, :, :, :p].set(
+            jnp.asarray(v_rows, pstate.v.dtype)[:, None])
+        acc = pstate.acc.at[:, :, :, :p].set(
+            jnp.asarray(acc_rows, jnp.float32)[:, None])
+        return PrefillChunkState(k=k, v=v, acc=acc)
+
     def prefill_chunk(self, params, pstate: PrefillChunkState, tokens_c,
                       row0, length) -> Tuple[jax.Array, PrefillChunkState]:
         """One Sarathi-style prefill slice: run the whole layer stack over

@@ -1,0 +1,56 @@
+"""Cache & decode-state surgery — the single public namespace.
+
+Lane-granular continuous batching grew its splice primitives across two
+modules: per-field `KVCache` surgery in `repro.core.cache` and the
+DecodeState-level wrappers (KV + SSM recurrent state + enc-dec cross
+K/V) in `repro.models.transformer`. This module is the one documented
+place to import them from; the serving engine's admission and
+prefix-copy paths (`launch/serve.py`, `launch/prefix_cache.py`) resolve
+every splice through these names.
+
+Naming convention — the prefix says what a helper operates on:
+
+``state_*`` — whole `DecodeState` pytrees (batch axis 1, layer-stacked):
+  state_lane_slice(state, lane)            one lane as a batch-1 state
+  state_lane_insert(state, lane, fresh)    splice a batch-1 state in
+  state_lanes_insert(state, src, fresh)    multi-lane scatter splice
+  state_lane_select(active, new, old)      per-lane merge (termination)
+
+``kv_*`` — bare `KVCache` instances (batch_axis selects layout):
+  kv_lane_slice / kv_lane_insert / kv_lanes_insert / kv_lane_reset
+
+Slot-axis windows (fill-aware decode cost):
+  slot_window(cache, w)                    first-w-slots view
+  slot_window_merge(full, win)             write the window back
+  decode_window(max_fill, steps, slots, prune)   pow2 window choice
+
+Prefix snapshots (prefix-sharing admission):
+  prefix_slot_aligned(kv, length)          identity-layout check
+  cache_prefix_rows(kv, length)            host rows [0, length) or None
+
+All splices copy every cache field — including the int8/quantized
+mirrors, their scales, and the accumulated eviction scores — so
+per-lane pruning state stays exact across surgery; see the docstrings
+on the underlying functions for the per-field contracts.
+"""
+from __future__ import annotations
+
+from repro.core.cache import (cache_prefix_rows, decode_window,
+                              lane_insert as kv_lane_insert,
+                              lane_reset as kv_lane_reset,
+                              lane_slice as kv_lane_slice,
+                              lanes_insert as kv_lanes_insert,
+                              prefix_slot_aligned, slot_window,
+                              slot_window_merge)
+from repro.models.transformer import (lane_insert as state_lane_insert,
+                                      lane_select as state_lane_select,
+                                      lane_slice as state_lane_slice,
+                                      lanes_insert as state_lanes_insert)
+
+__all__ = [
+    "state_lane_slice", "state_lane_insert", "state_lanes_insert",
+    "state_lane_select",
+    "kv_lane_slice", "kv_lane_insert", "kv_lanes_insert", "kv_lane_reset",
+    "slot_window", "slot_window_merge", "decode_window",
+    "prefix_slot_aligned", "cache_prefix_rows",
+]
