@@ -19,10 +19,13 @@ import jax.numpy as jnp
 from benchmarks import common
 from benchmarks.common import emit, time_fn
 from repro.core import baselines, quant
-from repro.core.attention import (decode_attention, fused_auto_decision,
+from repro.core.attention import (decode_attention,
+                                  decode_attention_stacked,
+                                  fused_auto_decision,
                                   windowed_decode_attention)
 from repro.core.cache import decode_window, init_cache
 from repro.launch.roofline import HBM_BW
+from repro.launch.serve import donation_mode
 
 B, HK, HQ, D = 2, 4, 8, 64
 SCAN_STEPS = 32
@@ -86,10 +89,48 @@ def _fill_sweep(summary):
         emit(f"latency_win_fill{fill}_slots{SWEEP_SLOTS}", us,
              f"window={w or SWEEP_SLOTS}")
         summary[f"unicaim_win_us_fill{fill}_slots{SWEEP_SLOTS}"] = us
+        summary[f"unicaim_win_us_fill{fill}_slots{SWEEP_SLOTS}_p50"] = us.p50
     speedup = rows[SWEEP_FILLS[-1]] / rows[SWEEP_FILLS[0]]
     emit(f"latency_win_speedup_fill{SWEEP_FILLS[0]}_vs_{SWEEP_SLOTS}", 0.0,
          f"step_cost_ratio={speedup:.2f}x")
     summary["win_speedup_fill128_vs_4096"] = speedup
+    _inplace_fill_sweep(summary, prune, q, kn, vn, rows)
+
+
+def _inplace_fill_sweep(summary, prune, q, kn, vn, win_rows):
+    """In-place stacked decode at slots=4096: the serving path's step.
+
+    Same cache layouts as the functional sweep, but stepping through
+    `decode_attention_stacked` on a 1-layer stacked cache carried by a
+    SCAN_STEPS-long lax.scan — the exact shape ServeLoop's decode block
+    compiles. The scan carry updates in place inside the compiled while
+    loop (even on CPU, where jit-boundary donation is a no-op — see
+    `donation_mode`), so the per-step cost drops the per-dispatch
+    cache-copy floor the functional rows pay."""
+    for fill in SWEEP_FILLS:
+        kv = jax.tree.map(lambda a: a[None],
+                          _filled_cache(fill, SWEEP_SLOTS, prune, key=fill))
+        w = decode_window(fill, SCAN_STEPS, SWEEP_SLOTS, prune)
+
+        def run(kv, q, k, v, w=w):
+            def body(c, _):
+                c, o = decode_attention_stacked(c, 0, q, k, v, prune, w,
+                                                None)
+                return c, o
+            return jax.lax.scan(body, kv, None, length=SCAN_STEPS)
+
+        fn = jax.jit(run)
+        us = time_fn(lambda: fn(kv, q, kn, vn)) / SCAN_STEPS
+        emit(f"latency_inplace_fill{fill}_slots{SWEEP_SLOTS}", us,
+             f"window={w or SWEEP_SLOTS};scan_steps={SCAN_STEPS};"
+             f"vs_functional={win_rows[fill] / us:.2f}x")
+        summary[f"unicaim_inplace_us_fill{fill}_slots{SWEEP_SLOTS}"] = us
+    speedup = (win_rows[SWEEP_FILLS[0]]
+               / summary[f"unicaim_inplace_us_fill{SWEEP_FILLS[0]}"
+                         f"_slots{SWEEP_SLOTS}"])
+    emit(f"latency_inplace_speedup_fill{SWEEP_FILLS[0]}", 0.0,
+         f"inplace_vs_functional={speedup:.2f}x")
+    summary["inplace_speedup_fill128"] = speedup
 
 
 def run():
@@ -155,6 +196,7 @@ def run():
     decision = fused_auto_decision()
     summary["fused_auto_engine"] = decision["engine"]
     summary["fused_auto_reason"] = decision["reason"]
+    summary["donation"] = donation_mode()
     emit("latency_fused_auto", 0.0,
          f"engine={decision['engine']};backend={decision['backend']}")
     _fill_sweep(summary)

@@ -157,6 +157,7 @@ def run():
              f"continuous_vs_static={dt_s / dt_c:.2f}x")
         if tag == "unicaim":
             summary = {
+                "donation": agg["donation"],
                 "tok_s": agg["tokens"] / dt_c,
                 "p50_ttft_s": agg["p50_ttft_s"],
                 "p99_ttft_s": agg["p99_ttft_s"],

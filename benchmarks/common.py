@@ -17,8 +17,26 @@ def set_smoke(on: bool = True) -> None:
     SMOKE = on
 
 
+class Timing(float):
+    """Min wall-time (µs) that also carries the run's p50.
+
+    Behaves exactly like the float minimum everywhere (comparisons,
+    arithmetic, json serialization), so existing callers keep their
+    min-based semantics; `.p50` exposes the median of the same samples
+    so benches can record a `<name>_p50` sibling row. compare_bench
+    uses the p50/min ratio to flag noisy runs whose ratios should not
+    be trusted."""
+
+    def __new__(cls, samples):
+        ts = np.asarray(samples, dtype=np.float64)
+        self = super().__new__(cls, float(np.min(ts)))
+        self.p50 = float(np.median(ts))
+        return self
+
+
 def time_fn(fn, *args, warmup=2, iters=7):
-    """Min wall-time (µs) of a jitted callable.
+    """Min wall-time (µs) of a jitted callable (a `Timing` float; its
+    `.p50` attribute holds the median of the same samples).
 
     Min, not median: shared CI runners carry multi-ms scheduling noise
     that inflates medians by 2-3x run to run (interleaved profiling of
@@ -33,7 +51,7 @@ def time_fn(fn, *args, warmup=2, iters=7):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         ts.append((time.perf_counter() - t0) * 1e6)
-    return float(np.min(ts))
+    return Timing(ts)
 
 
 def emit(name: str, us_per_call: float, derived: str):

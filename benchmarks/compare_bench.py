@@ -1,11 +1,11 @@
-"""Warn-only regression check: fresh smoke-bench JSON vs committed baseline.
+"""Regression check: fresh smoke-bench JSON vs committed baseline.
 
 Committed baselines live in ``benchmarks/baselines/`` (the smoke sweep's
 outputs in the repo root are gitignored); refresh them by copying a fresh
 smoke run's ``BENCH_*.json`` over them in the same PR that changes the
 performance. CI runs::
 
-    python benchmarks/compare_bench.py \
+    python benchmarks/compare_bench.py --fail-on-counts \
         benchmarks/baselines/BENCH_serve.json BENCH_serve.json
 
 Throughput-style keys (``*tok_s*``) warn when the fresh value drops below
@@ -21,22 +21,35 @@ share-style keys (``*hit_rate*`` / ``*dedup*``, deterministic fractions
 of admissions served from cache) and reuse-count keys
 (``*copies*`` / ``*tokens_reused*`` / ``*_hits*``) warn when the fresh
 value drops below the baseline — fewer cache hits on identical traffic
-means the admission path stopped consulting or populating the trie. Everything else
-— including the string-valued decision records (``fused_auto_*``) — is
-informational. The exit code is always 0: shared CI runners are far too
-noisy for a hard wall-clock gate, so this is a trajectory tripwire, not
-a merge blocker. Warnings use GitHub ``::warning::`` annotations so they
-surface on the PR checks page.
+means the admission path stopped consulting or populating the trie.
+``*_p50`` keys are sibling medians of the min-based ``*_us`` rows
+(see ``common.Timing``): they are never compared against the baseline,
+but when a fresh run's p50/min ratio exceeds ``NOISE_RATIO`` the run is
+flagged as noisy — its wall-clock ratios should not be trusted.
+Everything else — including the string-valued decision records
+(``fused_auto_*``, ``donation``) — is informational.
+
+Exit code: 0 by default — shared CI runners are far too noisy for a hard
+wall-clock gate, so timing rows are a trajectory tripwire, not a merge
+blocker. ``--fail-on-counts`` makes DETERMINISTIC count-class
+regressions (more compiles/dispatches/windows than the committed
+baseline) exit 1; those do not depend on the wall clock, so there is no
+noise excuse. Keys new in the fresh run or missing from it never fail.
+Warnings use GitHub ``::warning::`` annotations so they surface on the
+PR checks page.
 """
 from __future__ import annotations
 
 import json
 import sys
 
-TOL = 0.7        # throughput may dip to 70% of baseline before warning
+TOL = 0.7          # throughput may dip to 70% of baseline before warning
+NOISE_RATIO = 2.0  # p50/min above this flags the run as noisy
 
 
 def classify(key: str) -> str:
+    if key.endswith("_p50"):
+        return "p50"
     if "tok_s" in key:
         return "throughput"
     # prefix-cache reuse keys are HIGHER-better; they must outrank the
@@ -54,8 +67,27 @@ def classify(key: str) -> str:
     return "info"
 
 
+def noise_checks(fresh: dict) -> list:
+    """[(level, kind, message)] — flag rows whose p50/min ratio says the
+    run was too noisy for its min-based ratios to mean much."""
+    out = []
+    for key, p50 in sorted(fresh.items()):
+        if not key.endswith("_p50") or not isinstance(p50, (int, float)):
+            continue
+        lo = fresh.get(key[:-len("_p50")])
+        if not isinstance(lo, (int, float)) or lo <= 0:
+            continue
+        if p50 / lo > NOISE_RATIO:
+            out.append(("warning", "noise",
+                        f"{key[:-len('_p50')]}: noisy run — p50 "
+                        f"{p50:.1f}us is {p50 / lo:.1f}x the min "
+                        f"{lo:.1f}us (> {NOISE_RATIO:g}x); treat this "
+                        f"run's latency ratios as unreliable"))
+    return out
+
+
 def compare(baseline: dict, fresh: dict) -> list:
-    """[(level, message)] — level 'warning' or 'notice'."""
+    """[(level, kind, message)] — level 'warning' or 'notice'."""
     out = []
     for key in sorted(set(baseline) & set(fresh)):
         base, cur = baseline[key], fresh[key]
@@ -64,38 +96,42 @@ def compare(baseline: dict, fresh: dict) -> list:
             continue
         kind = classify(key)
         if kind == "throughput" and cur < TOL * base:
-            out.append(("warning",
+            out.append(("warning", kind,
                         f"{key}: {cur:.1f} tok/s < {TOL:.0%} of committed "
                         f"baseline {base:.1f}"))
         elif kind == "count" and cur > base:
-            out.append(("warning",
+            out.append(("warning", kind,
                         f"{key}: {cur:.0f} exceeds committed baseline "
                         f"{base:.0f} (dispatch/compile regression)"))
         elif kind == "latency" and cur * TOL > base:
-            out.append(("warning",
+            out.append(("warning", kind,
                         f"{key}: {cur:.1f}us > {1 / TOL:.2f}x committed "
                         f"baseline {base:.1f}us (latency regression)"))
         elif kind == "ratio" and cur < TOL * base:
-            out.append(("warning",
+            out.append(("warning", kind,
                         f"{key}: {cur:.2f} < {TOL:.0%} of committed "
                         f"baseline ratio {base:.2f}"))
         elif kind in ("share", "reuse") and cur < base:
-            out.append(("warning",
+            out.append(("warning", kind,
                         f"{key}: {cur:g} below committed baseline {base:g} "
                         f"(prefix-cache reuse regression — identical "
                         f"traffic should hit at least as often)"))
-        else:
-            out.append(("notice", f"{key}: {base:g} -> {cur:g}"))
+        elif kind != "p50":
+            out.append(("notice", kind, f"{key}: {base:g} -> {cur:g}"))
     for key in sorted(set(baseline) - set(fresh)):
-        out.append(("warning", f"{key}: present in baseline, missing from "
-                               "fresh run"))
+        out.append(("warning", "missing",
+                    f"{key}: present in baseline, missing from fresh run"))
+    out.extend(noise_checks(fresh))
     return out
 
 
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
+    fail_on_counts = "--fail-on-counts" in argv
+    argv = [a for a in argv if a != "--fail-on-counts"]
     if len(argv) != 2:
-        print("usage: compare_bench.py <baseline.json> <fresh.json>")
+        print("usage: compare_bench.py [--fail-on-counts] "
+              "<baseline.json> <fresh.json>")
         return 0
     try:
         with open(argv[0]) as f:
@@ -105,15 +141,23 @@ def main(argv=None) -> int:
     except (OSError, json.JSONDecodeError) as e:    # warn-only by design
         print(f"::warning::bench compare skipped: {e}")
         return 0
-    warned = 0
-    for level, msg in compare(baseline, fresh):
+    warned = failed = 0
+    for level, kind, msg in compare(baseline, fresh):
         if level == "warning":
             warned += 1
-            print(f"::warning::{msg}")
+            if fail_on_counts and kind == "count":
+                failed += 1
+                print(f"::error::{msg}")
+            else:
+                print(f"::warning::{msg}")
         else:
             print(msg)
-    print(f"{warned} warning(s) vs committed baseline (warn-only, "
-          "never fails the build)")
+    if failed:
+        print(f"{failed} count regression(s) vs committed baseline "
+              "(--fail-on-counts: deterministic counters must not grow)")
+        return 1
+    print(f"{warned} warning(s) vs committed baseline (timing rows are "
+          "warn-only; counts fail only under --fail-on-counts)")
     return 0
 
 

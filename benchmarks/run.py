@@ -49,6 +49,11 @@ def main(argv=None) -> None:
             print(f"wrote {path}", file=sys.stderr)
         print(f"bench_{name}_total,{(time.time() - t0) * 1e6:.0f},done",
               file=sys.stderr)
+    if args.smoke:
+        # cross-PR trajectory: committed baseline history + this run
+        from benchmarks import trajectory
+        print()
+        trajectory.main([])
 
 
 if __name__ == "__main__":

@@ -1,0 +1,151 @@
+"""Cross-PR performance trajectory from committed bench baselines.
+
+Every PR that moves performance refreshes ``benchmarks/baselines/
+BENCH_*.json``, so the git history of those files IS the repo's
+performance trajectory — one column per committing PR. This module
+renders it as a table (plus a ``fresh`` column from the current run's
+``./BENCH_*.json`` when present, with a delta against the newest
+committed column), and is appended to the ``benchmarks/run.py --smoke``
+output so every CI bench run shows where the numbers came from, not
+just where they are.
+
+Standalone::
+
+    python benchmarks/trajectory.py [--revs 6] [names...]
+
+Wall-clock caveat: columns come from different machines/runs — the
+trajectory shows direction and order of magnitude, not tight ratios
+(deterministic counters like dispatch counts ARE exact).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASE_DIR = os.path.join(ROOT, "benchmarks", "baselines")
+
+# the headline metrics worth a trajectory row, per bench file (matched
+# as prefixes so sweep families stay together without enumerating fills)
+KEY_PREFIXES = {
+    "latency": ("unicaim_us_ctx", "dense_us_ctx", "unicaim_scan_us_ctx",
+                "unicaim_win_us_fill", "unicaim_inplace_us_fill",
+                "win_speedup", "inplace_speedup", "speedup_vs_dense",
+                "donation"),
+    "serve": ("tok_s", "chunked_tok_s", "grouped_admit_tok_s",
+              "seq_admit_tok_s", "prefix_reuse_tok_s", "prefill_compiles",
+              "grouped_prefill_dispatches", "prefix_dedup_ratio",
+              "donation"),
+    "aedp": ("speedup", "reduction", "tok_s"),
+}
+
+
+def _git(*args):
+    try:
+        out = subprocess.run(["git", "-C", ROOT, *args],
+                             capture_output=True, text=True, timeout=30)
+        return out.stdout if out.returncode == 0 else None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def history(name: str, revs: int = 6):
+    """[(label, summary_dict)] oldest→newest for one committed baseline
+    (git history of benchmarks/baselines/BENCH_<name>.json), empty when
+    git or the file is unavailable."""
+    rel = f"benchmarks/baselines/BENCH_{name}.json"
+    log = _git("log", "--format=%h", "--", rel)
+    if not log:
+        return []
+    cols = []
+    for rev in log.split()[:revs][::-1]:
+        text = _git("show", f"{rev}:{rel}")
+        if text is None:
+            continue
+        try:
+            cols.append((rev, json.loads(text)))
+        except json.JSONDecodeError:
+            continue
+    return cols
+
+
+def _fmt(v) -> str:
+    if isinstance(v, bool) or v is None:
+        return str(v)
+    if isinstance(v, str):
+        return v if len(v) <= 12 else v[:11] + "…"
+    if isinstance(v, (int, float)):
+        return f"{v:.4g}"
+    return "?"
+
+
+def table(name: str, revs: int = 6) -> str:
+    """Markdown-ish trajectory table for one bench, '' when no data."""
+    cols = history(name, revs)
+    fresh_path = os.path.join(os.getcwd(), f"BENCH_{name}.json")
+    fresh = None
+    if os.path.exists(fresh_path):
+        try:
+            with open(fresh_path) as f:
+                fresh = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            fresh = None
+    if not cols and fresh is None:
+        return ""
+    prefixes = KEY_PREFIXES.get(name, ())
+    keys = []
+    for _, d in cols + ([("fresh", fresh)] if fresh else []):
+        for k in d:
+            if k not in keys and (not prefixes
+                                  or any(k.startswith(p) for p in prefixes)):
+                keys.append(k)
+    if not keys:
+        return ""
+    heads = [rev for rev, _ in cols] + (["fresh", "delta"] if fresh else [])
+    width = max(len(k) for k in keys)
+    lines = [f"== BENCH_{name} trajectory (oldest → newest) ==",
+             " " * width + "  " + "  ".join(f"{h:>10}" for h in heads)]
+    newest = cols[-1][1] if cols else {}
+    for k in sorted(keys):
+        row = [_fmt(d.get(k, "-")) for _, d in cols]
+        if fresh is not None:
+            cur, base = fresh.get(k), newest.get(k)
+            row.append(_fmt(cur if cur is not None else "-"))
+            if (isinstance(cur, (int, float)) and isinstance(base,
+                                                             (int, float))
+                    and not isinstance(cur, bool) and base):
+                row.append(f"{(cur - base) / abs(base):+.0%}")
+            else:
+                row.append("new" if base is None and cur is not None
+                           else "-")
+        lines.append(f"{k:<{width}}  " + "  ".join(f"{c:>10}" for c in row))
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    revs = 6
+    if "--revs" in argv:
+        i = argv.index("--revs")
+        revs = int(argv[i + 1])
+        argv = argv[:i] + argv[i + 2:]
+    names = argv
+    if not names and os.path.isdir(BASE_DIR):
+        names = sorted(
+            f[len("BENCH_"):-len(".json")] for f in os.listdir(BASE_DIR)
+            if f.startswith("BENCH_") and f.endswith(".json"))
+    shown = 0
+    for name in names:
+        t = table(name, revs)
+        if t:
+            print(t + "\n")
+            shown += 1
+    if not shown:
+        print("no committed baselines or fresh BENCH_*.json found")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

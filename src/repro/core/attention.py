@@ -23,8 +23,10 @@ from repro.runtime.flags import xscan
 
 from repro.configs.base import PruneConfig
 from repro.core import quant, scoring, topk
-from repro.core.cache import (KVCache, protected_mask, slot_window,
-                              slot_window_merge, write_token)
+from repro.core.cache import (KVCache, _token_writes, layer_window,
+                              protected_mask, slot_window,
+                              slot_window_merge, write_token,
+                              write_token_stacked)
 from repro.core.topk import NEG_INF
 from repro.runtime.sharding import shard
 
@@ -328,8 +330,19 @@ def decode_attention(cache: KVCache, q: jax.Array, k_new: jax.Array,
     k_new: [B, Hk, d], v_new: [B, Hk, dv] current token (post-RoPE)
     returns (updated cache, attention output [B, Hq, dv] f32).
     """
-    head_dim = q.shape[-1]
     cache = write_token(cache, k_new, v_new, prune)
+    return _policy_attend(cache, q, prune)
+
+
+def _policy_attend(cache: KVCache, q: jax.Array, prune: PruneConfig,
+                   ) -> Tuple[KVCache, jax.Array]:
+    """Post-write half of a decode step: policy dispatch (dense / h2o /
+    unicaim score→select→attend, fused or composed) + charge-domain
+    accumulation. Shared verbatim by the functional `decode_attention`
+    and the in-place `decode_attention_stacked` (which hands it a
+    windowed read VIEW of the stacked cache), so both paths are the same
+    arithmetic — the basis of their bitwise parity."""
+    head_dim = q.shape[-1]
 
     if prune.policy in ("dense", "streaming"):
         out, _ = _dense_attend(cache, q, head_dim)
@@ -399,6 +412,74 @@ def decode_attention(cache: KVCache, q: jax.Array, k_new: jax.Array,
         probs_acc = scoring.score_probs(s_exact, head_dim)
     acc = scoring.accumulate(cache.acc, probs_acc, hk, prune.acc_decay)
     return cache._replace(acc=acc), out
+
+
+def decode_attention_stacked(kv: KVCache, li, q: jax.Array,
+                             k_new: jax.Array, v_new: jax.Array,
+                             prune: PruneConfig, window: Optional[int],
+                             active: Optional[jax.Array],
+                             ) -> Tuple[KVCache, jax.Array]:
+    """One IN-PLACE decode step at layer `li` of a layer-stacked cache.
+
+    The zero-copy split of `windowed_decode_attention`: reads go through
+    a `dynamic_slice` window VIEW of layer `li` (`layer_window` — pure
+    reads, aliasing-safe), writes go straight into the full-width stacked
+    buffers as O(B·Hk·dh) scatters plus one O(window) `dynamic_update_
+    slice` for the accumulated-score row — never the per-field
+    slice-copy + merge round-trip that defeats `donate_argnums`. `kv`
+    threads through the caller's layer scan as a CARRY, so under jit the
+    whole DecodeState stays input-output aliased across the decode block.
+
+    `active` ([B] bool, optional) freezes finished lanes at the source
+    (dropped scatters + kept acc rows) — replacing the full-width
+    `state_lane_select` merge of the masked decode block. Active-lane
+    arithmetic is `_policy_attend` over the same windowed values the
+    functional path sees, hence bitwise-identical outputs; inactive
+    lanes' out rows are garbage the caller already masks.
+
+    q: [B, Hq, d]; k_new/v_new: [B, Hk, ·]; window as in
+    `windowed_decode_attention` (None = full width — eviction/ring-wrap
+    lanes included, since `layer_window` then views every slot).
+    Returns (updated stacked cache, out [B, Hq, dv])."""
+    w = kv.slots if window is None or window >= kv.slots else window
+    view = layer_window(kv, li, w)
+    slot, vals = _token_writes(view, k_new, v_new, prune)
+    # mirror the token write into the view (all lanes, matching the
+    # functional path — inactive lanes' results never land anywhere)
+    b, hk = slot.shape
+    bi = jnp.arange(b)[:, None]
+    hi = jnp.arange(hk)[None, :]
+    acc0 = view.acc
+    view = view._replace(
+        **{f: getattr(view, f).at[bi, hi, slot].set(v)
+           for f, v in vals.items()},
+        fill=jnp.minimum(view.fill + 1, w), step=view.step + 1)
+    view, out = _policy_attend(view, q, prune)
+    acc_row = view.acc
+    if active is not None:
+        acc_row = jnp.where(active[:, None, None], acc_row, acc0)
+    # Storage writes LAST, with the scatter index carrying a zero-valued
+    # data dependency on the attend output. This is load-bearing for the
+    # in-place guarantee: the attend's window reads of the stacked
+    # buffers are dataflow-independent of the scatters, and XLA's
+    # scheduler is free to place an in-place-aspiring scatter BEFORE a
+    # read of the same buffer — copy-insertion then preserves the old
+    # value with a full O(slots) carry copy per step, silently
+    # resurrecting the copy floor (measured: ~8 MB/step temp at
+    # slots=4096; `lax.optimization_barrier` does NOT fix the schedule).
+    # Routing `dep == 0` (guaranteed: nan_to_num maps the NaN/Inf edge
+    # of 0.0*x to 0.0, and the runtime dependency keeps the product from
+    # constant-folding) through the scatter index forces every read to
+    # complete first, keeping compiled temp bytes flat in `slots`.
+    dep = jnp.nan_to_num(0.0 * (jnp.sum(out) + jnp.sum(acc_row))
+                         ).astype(jnp.int32)
+    kv = write_token_stacked(kv, li, slot + dep,
+                             {f: v for f, v in vals.items() if f != "acc"},
+                             active)
+    li = jnp.asarray(li, jnp.int32) + dep
+    acc = jax.lax.dynamic_update_slice(kv.acc, acc_row[None],
+                                       (li, 0, 0, 0))
+    return kv._replace(acc=acc), out
 
 
 # ---------------------------------------------------------------------------

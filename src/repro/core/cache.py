@@ -10,7 +10,7 @@ and scan over it.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -225,24 +225,69 @@ def slot_window_merge(full: KVCache, win: KVCache) -> KVCache:
 
 
 def decode_window(max_fill: int, steps: int, slots: int,
-                  prune: PruneConfig) -> Optional[int]:
-    """Power-of-two slot window covering `steps` decode steps from
-    `max_fill`, or None when only the full width is valid.
+                  prune: PruneConfig, grid: Union[str, int] = "pow2",
+                  ) -> Optional[int]:
+    """Slot window covering `steps` decode steps from `max_fill`, or None
+    when only the full width is valid.
 
     The window must hold every live slot plus the `steps` about-to-append
     tokens, and stay wide enough for the selection machinery: at least
     `select_k` slots so top-k never exceeds the axis, and a multiple of
-    `select_blocks` so the hierarchical race partitions evenly (a pow2
-    window covers any pow2 block count; odd block counts fall back to
-    full width). Returns None — run unwindowed — once the window reaches
-    the allocated slot count (including every full lane, where eviction
-    and ring wrap-around engage)."""
+    `select_blocks` so the hierarchical race partitions evenly (odd block
+    counts that don't divide the window fall back to full width). Returns
+    None — run unwindowed — once the window reaches the allocated slot
+    count (including every full lane, where eviction and ring wrap-around
+    engage).
+
+    `grid` picks the quantization of the window width, which bounds how
+    many distinct programs the jit cache can accumulate per decode-block
+    shape: ``"pow2"`` (default) rounds up to a power of two (≤ log2(slots)
+    programs, the coarsest grid — up to 2x oversized between 2^n and
+    2^(n+1)); an int `c` rounds up to the next multiple of `c` (≤ slots/c
+    programs — an additive chunk grid for tighter fits, e.g. c =
+    cfg.attn_chunk keeps the window within one chunk of the live
+    context). Both grids honour the same select_k/select_blocks floor, so
+    either window is bit-identical to the full-width step."""
     need = max(int(max_fill) + max(steps, 1), prune.select_k, 1)
-    w = 1 << (need - 1).bit_length()
+    if grid == "pow2":
+        w = 1 << (need - 1).bit_length()
+    else:
+        c = max(1, int(grid))
+        w = -(-need // c) * c
     nb = max(1, prune.select_blocks)
     if w % nb or prune.select_k % nb:
         return None
     return None if w >= slots else w
+
+
+def layer_window(cache: KVCache, li, w: int) -> KVCache:
+    """Windowed READ view of one layer of a stacked ([L, B, Hk, S, ·])
+    cache: `dynamic_slice` out layer `li` (a traced scalar — the layer
+    scan's position) and the first `w` slots of every slot-axis field.
+
+    This is the read half of the in-place decode split: slicing is a pure
+    read, so taking the view does NOT break XLA input–output aliasing of
+    the full-width buffers the way `slot_window` + `slot_window_merge`
+    round-trips do. Writes go back through `write_token_stacked` /
+    targeted `dynamic_update_slice` at layer `li` instead."""
+    li = jnp.asarray(li, jnp.int32)
+
+    def cut(a, ax_from_end):
+        if a is None:
+            return None
+        lw = jax.lax.dynamic_index_in_dim(a, li, 0, keepdims=False)
+        ax = lw.ndim - ax_from_end
+        return jax.lax.slice_in_dim(lw, 0, w, axis=ax)
+
+    def row(a):
+        return (None if a is None
+                else jax.lax.dynamic_index_in_dim(a, li, 0, keepdims=False))
+
+    return KVCache(
+        k=cut(cache.k, 2), v=cut(cache.v, 2), kq=cut(cache.kq, 2),
+        kscale=cut(cache.kscale, 1), vscale=cut(cache.vscale, 1),
+        acc=cut(cache.acc, 1), valid=cut(cache.valid, 1),
+        pos=cut(cache.pos, 1), fill=row(cache.fill), step=row(cache.step))
 
 
 # ---------------------------------------------------------------------------
@@ -340,6 +385,41 @@ def _choose_slot(cache: KVCache, prune: PruneConfig) -> jax.Array:
     return jnp.where(full, evict, jnp.broadcast_to(append, (b, hk))).astype(jnp.int32)
 
 
+def _token_writes(cache: KVCache, k_new: jax.Array,
+                  v_new: Optional[jax.Array], prune: PruneConfig,
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Slot choice + per-field row values for a one-token insert.
+
+    Returns (slot [B, Hk], {field: [B, Hk, ·] value to store at slot}).
+    Shared by the functional `write_token` (scatter into THIS cache) and
+    the in-place stacked path (`write_token_stacked` — scatter into the
+    full-width layer-stacked buffers while only the window was read)."""
+    b, hk, _ = cache.acc.shape
+    slot = _choose_slot(cache, prune)                              # [B,Hk]
+    vals: Dict[str, jax.Array] = {}
+    if cache.quantized_kv:
+        vals["k"], vals["kscale"] = quant.quantize(k_new, 8)
+        if cache.v is not None:
+            vals["v"], vals["vscale"] = quant.quantize(v_new, 8)
+    else:
+        vals["k"] = k_new.astype(cache.k.dtype)
+        if cache.v is not None:
+            vals["v"] = v_new.astype(cache.v.dtype)
+        if cache.kq is not None:
+            vals["kq"], vals["kscale"] = quant.quantize(k_new,
+                                                        prune.score_bits)
+    if prune.init_new_score == "mean":
+        denom = jnp.maximum(jnp.sum(cache.valid, axis=-1), 1)
+        vals["acc"] = (jnp.sum(jnp.where(cache.valid, cache.acc, 0.0),
+                               axis=-1) / denom)
+    else:
+        vals["acc"] = jnp.zeros((b, hk), jnp.float32)
+    vals["valid"] = jnp.ones((b, hk), jnp.bool_)
+    vals["pos"] = jnp.broadcast_to(cache.step[:, None], (b, hk)
+                                   ).astype(jnp.int32)
+    return slot, vals
+
+
 def write_token(cache: KVCache, k_new: jax.Array,
                 v_new: Optional[jax.Array], prune: PruneConfig) -> KVCache:
     """Insert one token (decode step): static eviction + in-place overwrite.
@@ -347,42 +427,54 @@ def write_token(cache: KVCache, k_new: jax.Array,
     k_new: [B, Hk, dh]; v_new: [B, Hk, dv] or None (latent mode).
     """
     b, hk, s = cache.acc.shape
-    slot = _choose_slot(cache, prune)                              # [B,Hk]
+    slot, vals = _token_writes(cache, k_new, v_new, prune)
     bi = jnp.arange(b)[:, None]
     hi = jnp.arange(hk)[None, :]
-
-    kq, kscale, vscale = cache.kq, cache.kscale, cache.vscale
-    if cache.quantized_kv:
-        kc, ks = quant.quantize(k_new, 8)
-        k = cache.k.at[bi, hi, slot].set(kc)
-        kscale = kscale.at[bi, hi, slot].set(ks)
-        v = cache.v
-        if v is not None:
-            vc, vs = quant.quantize(v_new, 8)
-            v = v.at[bi, hi, slot].set(vc)
-            vscale = vscale.at[bi, hi, slot].set(vs)
-    else:
-        k = cache.k.at[bi, hi, slot].set(k_new.astype(cache.k.dtype))
-        v = cache.v
-        if v is not None:
-            v = v.at[bi, hi, slot].set(v_new.astype(v.dtype))
-        if kq is not None:
-            qn, sn = quant.quantize(k_new, prune.score_bits)
-            kq = kq.at[bi, hi, slot].set(qn)
-            kscale = kscale.at[bi, hi, slot].set(sn)
-
-    if prune.init_new_score == "mean":
-        denom = jnp.maximum(jnp.sum(cache.valid, axis=-1), 1)
-        init = jnp.sum(jnp.where(cache.valid, cache.acc, 0.0), axis=-1) / denom
-    else:
-        init = jnp.zeros((b, hk), jnp.float32)
-    acc = cache.acc.at[bi, hi, slot].set(init)
-    valid = cache.valid.at[bi, hi, slot].set(True)
-    pos = cache.pos.at[bi, hi, slot].set(
-        jnp.broadcast_to(cache.step[:, None], (b, hk)))
+    upd = {f: getattr(cache, f).at[bi, hi, slot].set(v)
+           for f, v in vals.items()}
     return cache._replace(
-        k=k, v=v, kq=kq, kscale=kscale, vscale=vscale, acc=acc, valid=valid,
-        pos=pos, fill=jnp.minimum(cache.fill + 1, s), step=cache.step + 1)
+        **upd, fill=jnp.minimum(cache.fill + 1, s), step=cache.step + 1)
+
+
+def write_token_stacked(cache: KVCache, li, slot: jax.Array,
+                        vals: Dict[str, jax.Array],
+                        active: Optional[jax.Array]) -> KVCache:
+    """Storage half of the in-place decode split: scatter one token's row
+    values (from `_token_writes` over a windowed READ view) straight into
+    the FULL-WIDTH layer-stacked buffers at layer `li`.
+
+    Each field writes O(B·Hk·dh) bytes — never the O(S) round-trip of
+    `slot_window_merge` — so XLA keeps the stacked buffers aliased
+    input-to-output through the layer scan and the jitted decode block.
+    `active` ([B] bool, optional) gates lanes at the SOURCE: an inactive
+    lane's slot index is pushed out of bounds and the scatter drops it
+    (`mode="drop"`), which replaces the full-width `jnp.where` merge of
+    `state_lane_select` for every cache field. Bit-identical to
+    `write_token` + lane-select for active lanes: active lanes always
+    append inside the window (`decode_window` covers fill + steps), and
+    the clamp `min(fill+1, S)` matches the windowed `min(fill+1, W)`
+    there."""
+    s = cache.slots
+    b, hk = slot.shape
+    li = jnp.asarray(li, jnp.int32)
+    bi = jnp.arange(b)[:, None]
+    hi = jnp.arange(hk)[None, :]
+    if active is not None:
+        slot = jnp.where(active[:, None], slot, s)     # OOB → dropped
+    upd = {f: getattr(cache, f).at[li, bi, hi, slot].set(
+               v, mode="drop", unique_indices=True)
+           for f, v in vals.items()}
+    fill_l = jax.lax.dynamic_index_in_dim(cache.fill, li, 0, keepdims=False)
+    step_l = jax.lax.dynamic_index_in_dim(cache.step, li, 0, keepdims=False)
+    new_fill = jnp.minimum(fill_l + 1, s)
+    new_step = step_l + 1
+    if active is not None:
+        new_fill = jnp.where(active, new_fill, fill_l)
+        new_step = jnp.where(active, new_step, step_l)
+    return cache._replace(
+        **upd,
+        fill=jax.lax.dynamic_update_index_in_dim(cache.fill, new_fill, li, 0),
+        step=jax.lax.dynamic_update_index_in_dim(cache.step, new_step, li, 0))
 
 
 def prefill_fill(cache: KVCache, k_full: jax.Array,

@@ -36,6 +36,15 @@ charge-domain probabilities.
   v      [BH, S, dv] ANY/HBM         exact values — winners DMA'd only
   out    [BH, G, dv] f32
   probs  [BH, S]     f32             Σ_g softmax_g(scores/√d)
+
+Composition with the in-place decode path: this kernel is a pure READ of
+the cache arrays (its fill-aware block skipping is the kernel-level
+analogue of `core/cache.layer_window`'s read window), so it slots into
+`decode_attention_stacked`'s read-window/storage-write split without
+breaking buffer donation — the token's scatter writes
+(`write_token_stacked`) land in the full-width stacked buffers after the
+kernel's reads, and the cache pytree stays input-output aliased through
+the decode block.
 """
 from __future__ import annotations
 

@@ -205,11 +205,20 @@ def decode_block_masked(model: Model, params, state, tok, active, rem,
     dropped by `lane_select` and their tokens are never emitted. Returns
     (state, tok, active, rem, key, toks [steps, B], emitted [steps, B]).
     """
+    inplace = model.supports_inplace_decode()
+
     def body(carry, _):
         state, tok, active, rem, key = carry
-        logits, new_state = model.decode_step(params, state, tok,
-                                              window=window)
-        state = state_lane_select(active, new_state, state)
+        if inplace:
+            # zero-copy path: finished lanes are frozen at the write
+            # source (dropped scatters), so no full-width lane_select
+            # merge — the state pytree stays input-output aliased
+            logits, state = model.decode_step(params, state, tok,
+                                              window=window, active=active)
+        else:
+            logits, new_state = model.decode_step(params, state, tok,
+                                                  window=window)
+            state = state_lane_select(active, new_state, state)
         live = active & (rem > 0)      # robust to active lanes w/o budget
         emit = live & (tok != eos)
         rem = rem - emit.astype(rem.dtype)
@@ -228,10 +237,19 @@ def decode_block_masked(model: Model, params, state, tok, active, rem,
     return state, tok, active, rem, key, toks, emitted
 
 
+def donation_mode() -> str:
+    """Whether jit buffer donation is honoured on this backend: ``"on"``,
+    or ``"cpu-noop"`` where `_donate_argnums` silently disables it (the
+    CPU runtime ignores donation). Recorded in `ServeLoop.counters` and
+    the BENCH_* rows so CPU fill-sweep floors read as copy-bound rather
+    than as regressions of the in-place decode path."""
+    return "cpu-noop" if jax.default_backend() == "cpu" else "on"
+
+
 def _donate_argnums(*argnums):
     # buffer donation is a no-op (and warns) on CPU; donate the decode
     # state + carries everywhere it is actually honoured
-    return () if jax.default_backend() == "cpu" else argnums
+    return () if donation_mode() == "cpu-noop" else argnums
 
 
 # Jitted entry points are cached on the Model's full constructor identity
@@ -645,6 +663,7 @@ class ServeLoop:
                  temperature: float = 0.0, top_k: int = 0,
                  top_p: float = 0.0, sample_seed: int = 0,
                  window: Union[str, None] = "auto",
+                 window_grid: Union[str, int] = "pow2",
                  prefix_cache_bytes: int = 0):
         self.model = model
         self.params = params
@@ -668,6 +687,13 @@ class ServeLoop:
         self.top_p = float(top_p)
         assert window in ("auto", None), window   # no silent full-width
         self.window = window                  # "auto" | None
+        # window quantization grid: "pow2" (≤ log2(slots) programs) |
+        # "chunk" (multiples of cfg.attn_chunk) | int (multiples of it) —
+        # see core/cache.decode_window
+        self.window_grid: Union[str, int] = (
+            model.cfg.attn_chunk if window_grid == "chunk" else window_grid)
+        assert (self.window_grid == "pow2"
+                or int(self.window_grid) > 0), window_grid
         self._windows: set = set()            # distinct windows dispatched
         self._key = jax.random.PRNGKey(sample_seed)
         self._prefill = _prefill_fn(_model_key(model))
@@ -714,11 +740,15 @@ class ServeLoop:
         # dispatch accounting: how many device calls each stage issued
         # (prefill_dispatches counts whole-prompt/group prefills and
         # chunked finalizes; chunk slices are tallied separately)
-        self.counters: Dict[str, int] = {
+        # `donation` is a string-valued counter: whether the donated
+        # decode-block buffers are actually reused on this backend (CPU
+        # silently no-ops donation, so its fill-sweep floor is copy-bound)
+        self.counters: Dict[str, Any] = {
             "prefill_dispatches": 0, "admit_dispatches": 0,
             "chunk_dispatches": 0, "decode_blocks": 0,
             "grouped_admissions": 0, "grouped_requests": 0,
             "decode_windows": 0,
+            "donation": donation_mode(),
             "prefix_lookups": 0, "prefix_hits": 0,
             "prefix_exact_hits": 0, "prefix_copies": 0,
             "prefix_tokens_reused": 0,
@@ -1322,7 +1352,7 @@ class ServeLoop:
         fill = np.asarray(self.state.kv.fill)          # [L, lanes]
         max_fill = int(fill[:, self.active].max())
         return decode_window(max_fill, steps, self.model.decode_slots,
-                             self.model.prune)
+                             self.model.prune, grid=self.window_grid)
 
     def step_block(self, steps: int = 0) -> bool:
         """Deprecated public alias of the engine's decode block; `run()`
@@ -1435,15 +1465,17 @@ class ServeLoop:
         return {"loop_shapes": len(self._prefill_shapes),
                 "jit_cache": int(jit_cache)}
 
-    def aggregate(self) -> Dict[str, float]:
-        """Serving metrics over completed requests (+ dispatch counters).
+    def aggregate(self) -> Dict[str, Any]:
+        """Serving metrics over completed requests (+ dispatch counters;
+        the string-valued `donation` marker passes through unchanged).
 
         With a prefix cache enabled, adds `prefix_hit_rate`
         (hits / admission lookups), `prefix_dedup_ratio` (prompt tokens
         served from cache / prompt tokens of completed requests — the
         fraction of prefill work deduplicated), and the trie's live
         bytes/entries/insert/eviction tallies."""
-        counters = {k: float(v) for k, v in self.counters.items()}
+        counters = {k: (v if isinstance(v, str) else float(v))
+                    for k, v in self.counters.items()}
         prefix: Dict[str, float] = {}
         if self.prefix_cache is not None:
             self._sync_cache_counters()

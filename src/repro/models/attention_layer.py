@@ -8,6 +8,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, PruneConfig
 from repro.core.attention import (chunked_causal_attention, decode_attention,
+                                  decode_attention_stacked,
                                   prefill_chunk_attend)
 from repro.core.cache import KVCache
 from repro.core.pruning import prefill_and_prune
@@ -124,6 +125,31 @@ def attention_decode(p, x, cfg: ModelConfig, cache: KVCache,
     cache, out = decode_attention(cache, q, k, v, prune)
     y = out.reshape(b, cfg.q_dim).astype(x.dtype) @ p["wo"]
     return y, cache
+
+
+def attention_decode_stacked(p, x, cfg: ModelConfig, kv: KVCache, li,
+                             prune: PruneConfig, window, active
+                             ) -> Tuple[jax.Array, KVCache]:
+    """In-place decode step at layer `li` of a layer-stacked cache.
+
+    Same projections + RoPE as `attention_decode` (the per-lane rotation
+    anchors on this layer's `step` row, read out of the stacked cache),
+    but the cache update goes through `decode_attention_stacked`: window
+    reads, scatter writes, stacked buffers aliased end-to-end. x: [B,d]
+    → (y [B,d], updated stacked cache)."""
+    b, _ = x.shape
+    q = (x @ p["wq"] + p.get("bq", 0)).reshape(b, cfg.n_heads, cfg.head_dim)
+    k = (x @ p["wk"] + p.get("bk", 0)).reshape(b, cfg.n_kv_heads, cfg.head_dim)
+    v = (x @ p["wv"] + p.get("bv", 0)).reshape(b, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.pos == "rope":
+        pos = jax.lax.dynamic_index_in_dim(kv.step, jnp.asarray(li, jnp.int32),
+                                           0, keepdims=False)       # [B]
+        q = rope(q, pos[:, None], cfg.rope_theta)
+        k = rope(k, pos[:, None], cfg.rope_theta)
+    kv, out = decode_attention_stacked(kv, li, q, k, v, prune, window,
+                                       active)
+    y = out.reshape(b, cfg.q_dim).astype(x.dtype) @ p["wo"]
+    return y, kv
 
 
 # ---------------------------------------------------------------------------

@@ -24,7 +24,9 @@ from repro.configs.base import ModelConfig, PruneConfig
 from repro.core import cache as kvcache
 from repro.core.cache import KVCache, init_cache
 from repro.models import layers as L
-from repro.models.attention_layer import (attention_decode, attention_prefill,
+from repro.models.attention_layer import (attention_decode,
+                                          attention_decode_stacked,
+                                          attention_prefill,
                                           attention_prefill_chunk,
                                           attention_train, cross_attention,
                                           encode_cross_kv, init_attention)
@@ -243,6 +245,24 @@ def _block_prefill_chunk(p, x, cfg, prune, bufs: PrefillChunkState,
     else:
         y = L.apply_mlp(p["mlp"], h, cfg.act)
     return x + y, PrefillChunkState(k_buf, v_buf, acc)
+
+
+def _block_decode_stacked(p, x, cfg, prune, kv, li, kind: str, window,
+                          active):
+    """Residual block, one token, writing layer `li` of the stacked cache
+    IN PLACE (scatter/windowed-row writes — no per-layer cache copy).
+    x: [B,d]. Returns (x, stacked cache). Attention-only kinds."""
+    h = L.apply_norm(p["ln1"], x[:, None, :], cfg.norm)[:, 0]
+    a, kv = attention_decode_stacked(p["attn"], h, cfg, kv, li, prune,
+                                     window, active)
+    x = x + a
+    h = L.apply_norm(p["ln2"], x[:, None, :], cfg.norm)[:, 0]
+    if kind.endswith("moe"):
+        y, _ = _moe(p["moe"], h[:, None, :], cfg)
+        y = y[:, 0]
+    else:
+        y = L.apply_mlp(p["mlp"], h[:, None, :], cfg.act)[:, 0]
+    return x + y, kv
 
 
 def _block_decode(p, x, cfg, prune, cache, kind: str, cross_kv=None):
@@ -845,20 +865,50 @@ class Model:
 
     # -- decode ---------------------------------------------------------------
 
+    def supports_inplace_decode(self) -> bool:
+        """True when the decode step can run the zero-copy in-place path:
+        a single scanned attention segment whose cache updates are
+        scatter/windowed-row writes into the layer-stacked buffers (the
+        stacked cache rides the layer scan as a CARRY, so donated buffers
+        stay input-output aliased end-to-end). Plain attention stacks
+        only — recurrent (ssm/hybrid), enc-dec cross-attention, and MLA
+        latent caches keep the functional path."""
+        cfg = self.cfg
+        return cfg.family in ("dense", "moe") and cfg.mla is None
+
     def decode_step(self, params, state: DecodeState, token: jax.Array,
-                    window: Optional[int] = None
+                    window: Optional[int] = None,
+                    active: Optional[jax.Array] = None,
+                    inplace: Optional[bool] = None
                     ) -> Tuple[jax.Array, DecodeState]:
         """token: [B] int32 → (logits [B,V], state).
 
         `window` (STATIC int, optional) runs the whole step — CAM scoring,
         selection, gather, exact attention, charge-domain accumulation,
         and the token write — over the `[:window]` slot prefix of every
-        layer's cache, then merges the prefix back. Live slots are always
-        a fill prefix (see `core/cache.slot_window`), so a window covering
-        `max(fill) + 1` is bit-identical to the full-width step while
-        paying O(window) instead of O(slots) per layer. Callers quantize
-        the window to powers of two (`core/cache.decode_window`) so the
-        jit cache gains at most log2(slots) windowed programs."""
+        layer's cache. Live slots are always a fill prefix (see
+        `core/cache.slot_window`), so a window covering `max(fill) + 1`
+        is bit-identical to the full-width step while paying O(window)
+        instead of O(slots) per layer. Callers quantize the window
+        (`core/cache.decode_window`) to bound the jit cache.
+
+        Families that `supports_inplace_decode()` default to the ZERO-COPY
+        path: the stacked cache threads the layer scan as a carry and
+        windowed reads / scatter writes keep every buffer input-output
+        aliased under `donate_argnums` — no per-step cache copy. `active`
+        ([B] bool, optional, in-place path only) freezes finished lanes
+        at the write source, replacing the decode block's full-width
+        `state_lane_select` merge. `inplace=False` forces the functional
+        slice-merge path (the parity oracle in tests); other families
+        always use it (where `active` must stay None — callers lane-select
+        instead)."""
+        if inplace is None:
+            inplace = self.supports_inplace_decode()
+        if inplace and state.kv is not None:
+            assert self.supports_inplace_decode(), self.cfg.family
+            return self._decode_step_inplace(params, state, token, window,
+                                             active)
+        assert active is None, "active-lane gating needs the in-place path"
         if (window is not None and state.kv is not None
                 and window < state.kv.k.shape[-2]):
             win = state._replace(kv=kvcache.slot_window(state.kv, window))
@@ -866,6 +916,36 @@ class Model:
             return logits, win._replace(
                 kv=kvcache.slot_window_merge(state.kv, win.kv))
         return self._decode_step_full(params, state, token)
+
+    def _decode_step_inplace(self, params, state: DecodeState,
+                             token: jax.Array, window: Optional[int],
+                             active: Optional[jax.Array]
+                             ) -> Tuple[jax.Array, DecodeState]:
+        """One decode step with the stacked cache as the layer scan's
+        CARRY: each layer reads a `dynamic_slice` window view and writes
+        its token row back by scatter (`core/attention.decode_attention_
+        stacked`), so no layer ever materializes a fresh cache buffer —
+        the per-step copy floor of the xs/ys functional scan is gone and
+        XLA aliases the donated DecodeState straight through."""
+        cfg = self.cfg
+        prune = self.prune
+        x = params["embed"][token].astype(_dtype(cfg.compute_dtype))
+        if cfg.pos == "sinusoidal" and state.kv is not None:
+            pos = state.kv.step[0][:, None]
+            x = x + L.sinusoidal(pos, cfg.d_model)[:, 0].astype(x.dtype)
+        (kind, n), = [s for s in self._segments() if s[1] > 0]
+
+        def body(carry, inp):
+            x, kv = carry
+            pl, li = inp
+            x, kv = _block_decode_stacked(pl, x, cfg, prune, kv, li, kind,
+                                          window, active)
+            return (x, kv), None
+
+        (x, kv), _ = xscan(body, (x, state.kv),
+                           (params[f"seg0_{kind}"], jnp.arange(n)))
+        state = state._replace(kv=kv)
+        return self._logits(params, x[:, None])[:, 0], state
 
     def _decode_step_full(self, params, state: DecodeState, token: jax.Array
                           ) -> Tuple[jax.Array, DecodeState]:

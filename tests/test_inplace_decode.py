@@ -1,0 +1,298 @@
+"""In-place donated decode tests.
+
+Three coordinated guarantees under test:
+
+  * bitwise parity — the read-window/storage-write split
+    (`decode_attention_stacked`, `Model.decode_step(inplace=True)`) must
+    match the functional path bit for bit across kv dtypes, policies,
+    select modes, the fused engine, lane masks, and windowed vs
+    full-width dispatch;
+  * the in-place guarantee itself — the compiled decode block's
+    temp-allocation bytes must stay FLAT as `slots` grows (a per-step
+    carry copy scales with slots and resurrects the copy floor this PR
+    kills), and `donate_argnums` must surface as input-output aliasing
+    in the lowered block programs;
+  * the additive chunk window grid — `decode_window(grid=c)` quantizes
+    window widths to multiples of c with a bounded program count.
+"""
+import dataclasses
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import PruneConfig, get_config, reduced
+from repro.core import baselines
+from repro.core.attention import decode_attention, decode_attention_stacked
+from repro.core.cache import decode_window
+from repro.launch import serve
+from repro.models.transformer import Model
+from repro.surgery import state_lane_select
+from tests.test_windowed_decode import _assert_trees_equal, _filled_cache
+
+jax.config.update("jax_platform_name", "cpu")
+
+B, HK, HQ, D = 2, 2, 4, 16
+
+
+def _stack(cache, layers=1):
+    """Layer-stack a single-layer cache (the DecodeState kv layout)."""
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (layers,) + a.shape), cache)
+
+
+def _qkv(i, key=100):
+    ks = jax.random.split(jax.random.PRNGKey(key + i), 3)
+    return (jax.random.normal(ks[0], (B, HQ, D)),
+            jax.random.normal(ks[1], (B, HK, D)),
+            jax.random.normal(ks[2], (B, HK, D)))
+
+
+# -- additive chunk window grid ----------------------------------------------
+
+
+def test_decode_window_chunk_grid():
+    prune = PruneConfig(policy="unicaim", heavy_budget=4032, reserve=64,
+                        select_k=64, sink_tokens=2, recent_window=8)
+    # need = fill + steps, rounded UP to a multiple of c
+    assert decode_window(100, 28, 4096, prune, grid=64) == 128
+    assert decode_window(129, 1, 4096, prune, grid=64) == 192
+    assert decode_window(128, 1, 4096, prune, grid=512) == 512
+    # tighter than pow2 between powers of two
+    assert decode_window(1025, 1, 4096, prune) == 2048       # pow2 doubles
+    assert decode_window(1025, 1, 4096, prune, grid=256) == 1280
+    # select_k floor and full-width fallback hold on every grid
+    assert decode_window(0, 1, 4096, prune, grid=16) == 64
+    assert decode_window(4090, 8, 4096, prune, grid=64) is None
+    # select_blocks must partition the chunked window too
+    nb3 = dataclasses.replace(prune, select_blocks=3, select_k=63)
+    assert decode_window(10, 1, 4096, nb3, grid=64) is None
+    nb2 = dataclasses.replace(prune, select_blocks=2)
+    assert decode_window(100, 28, 4096, nb2, grid=64) == 128
+    # program-count bound: every reachable width is one of slots/c values
+    widths = {decode_window(f, 4, 4096, prune, grid=256)
+              for f in range(0, 4096, 7)}
+    assert len(widths) <= 4096 // 256 + 1                    # + the None
+
+
+# -- core step: bitwise parity ------------------------------------------------
+
+
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8"])
+@pytest.mark.parametrize("policy,select_mode,fused", [
+    ("unicaim", "topk", False),
+    ("unicaim", "topk", True),
+    ("unicaim", "threshold", False),
+    ("h2o", "topk", False),
+    ("dense", "topk", False),
+])
+@pytest.mark.parametrize("windowed", [False, True])
+def test_inplace_step_bitwise_parity(kv_dtype, policy, select_mode, fused,
+                                     windowed):
+    """`decode_attention_stacked` == functional `decode_attention`, bit
+    for bit: outputs and every cache field, across multiple steps."""
+    if policy != "unicaim" and kv_dtype == "int8":
+        pytest.skip("int8 KV is a unicaim-mode knob")
+    prune = PruneConfig(policy=policy, heavy_budget=48, reserve=16,
+                        sink_tokens=2, recent_window=4, select_k=8,
+                        select_mode=select_mode, kv_dtype=kv_dtype,
+                        fused=fused, fused_backend="xla",
+                        accumulate="exact" if policy == "h2o" else "approx")
+    fills = [3, 9]
+    cf = _filled_cache(fills, prune.slots, prune, dtype=jnp.bfloat16,
+                       key=sum(fills))
+    kv = _stack(cf)
+    w = decode_window(max(fills), 3, prune.slots, prune) if windowed else None
+    if windowed:
+        assert w is not None and w < prune.slots
+    step_i = jax.jit(lambda c, q, k, v: decode_attention_stacked(
+        c, 0, q, k, v, prune, w, None))
+    step_f = jax.jit(lambda c, q, k, v: decode_attention(c, q, k, v, prune))
+    for i in range(3):
+        q, kn, vn = _qkv(i)
+        kv, oi = step_i(kv, q, kn, vn)
+        cf, of = step_f(cf, q, kn, vn)
+        np.testing.assert_array_equal(np.asarray(oi), np.asarray(of))
+        _assert_trees_equal(kv, _stack(cf))
+
+
+def test_inplace_eviction_parity():
+    """Full lanes (window=None): argmin eviction + overwrite stay
+    bit-identical through the scatter write path."""
+    prune = baselines.unicaim(heavy=24, reserve=8, select_k=8,
+                              sink_tokens=2, recent_window=4)
+    slots = prune.slots
+    cf = _filled_cache([slots, slots - 1], slots, prune,
+                       dtype=jnp.float32, key=7)
+    kv = _stack(cf)
+    step_i = jax.jit(lambda c, q, k, v: decode_attention_stacked(
+        c, 0, q, k, v, prune, None, None))
+    step_f = jax.jit(lambda c, q, k, v: decode_attention(c, q, k, v, prune))
+    for i in range(4):                       # crosses full → evicts
+        q, kn, vn = _qkv(i, key=7)
+        kv, oi = step_i(kv, q, kn, vn)
+        cf, of = step_f(cf, q, kn, vn)
+        np.testing.assert_array_equal(np.asarray(oi), np.asarray(of))
+        _assert_trees_equal(kv, _stack(cf))
+    assert int(np.asarray(kv.fill).max()) == slots
+
+
+def test_inplace_active_mask_freezes_lanes():
+    """`active` gates writes at the source (dropped scatters): inactive
+    lanes' cache rows stay frozen while active lanes march in lockstep
+    with the functional path."""
+    prune = baselines.unicaim(heavy=24, reserve=8, select_k=8,
+                              sink_tokens=2, recent_window=4)
+    fills = [5, 12]
+    cf = _filled_cache(fills, prune.slots, prune, dtype=jnp.float32, key=3)
+    kv = _stack(cf)
+    active = jnp.asarray([True, False])
+    w = decode_window(max(fills), 3, prune.slots, prune)
+    step_i = jax.jit(lambda c, q, k, v: decode_attention_stacked(
+        c, 0, q, k, v, prune, w, active))
+    step_f = jax.jit(lambda c, q, k, v: decode_attention(c, q, k, v, prune))
+    frozen = jax.tree.map(lambda a: np.asarray(a[:, 1]), _stack(cf))
+    for i in range(3):
+        q, kn, vn = _qkv(i, key=40)
+        kv, oi = step_i(kv, q, kn, vn)
+        cf, of = step_f(cf, q, kn, vn)
+        # active lane: output + every cache field match the functional step
+        np.testing.assert_array_equal(np.asarray(oi)[0], np.asarray(of)[0])
+        _assert_trees_equal(jax.tree.map(lambda a: a[:, 0], kv),
+                            jax.tree.map(lambda a: a[:, 0], _stack(cf)))
+        # inactive lane: bit-frozen at its pre-mask state
+        _assert_trees_equal(jax.tree.map(lambda a: a[:, 1], kv), frozen)
+
+
+# -- model + masked block parity ---------------------------------------------
+
+
+def _tiny_model(kv_dtype="bf16"):
+    cfg = reduced(get_config("longchat-7b"))
+    prune = dataclasses.replace(
+        baselines.unicaim(heavy=48, reserve=16, select_k=16,
+                          sink_tokens=2, recent_window=8),
+        kv_dtype=kv_dtype)
+    model = Model(cfg, prune)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 32))),
+             "length": jnp.asarray([9, 26], jnp.int32)}
+    logits, state = jax.jit(model.prefill)(params, batch)
+    return model, params, state, jnp.argmax(logits, -1)
+
+
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8"])
+@pytest.mark.parametrize("window", [None, 64])
+def test_model_inplace_decode_step_parity(kv_dtype, window):
+    """decode_step(inplace=True) — layer scan over the stacked cache with
+    scatter writes — is bitwise the functional slice/merge step: logits
+    and every DecodeState leaf."""
+    model, params, state, tok = _tiny_model(kv_dtype)
+    assert model.supports_inplace_decode()
+    si, sf = state, state
+    ti, tf = tok, tok
+    step = jax.jit(model.decode_step,
+                   static_argnames=("window", "inplace"))
+    for _ in range(4):
+        li, si = step(params, si, ti, window=window, inplace=True)
+        lf, sf = step(params, sf, tf, window=window, inplace=False)
+        np.testing.assert_array_equal(np.asarray(li), np.asarray(lf))
+        ti, tf = jnp.argmax(li, -1), jnp.argmax(lf, -1)
+    _assert_trees_equal(si, sf)
+
+
+def test_masked_block_inplace_parity():
+    """The masked decode block's in-place lane gating (dropped scatters)
+    matches functional step + `state_lane_select` exactly — tokens,
+    lane masks, and every state leaf."""
+    model, params, state, tok = _tiny_model()
+    active = jnp.asarray([True, False])
+    rem = jnp.asarray([6, 0], jnp.int32)
+    eos = jnp.int32(-1)
+    key = jax.random.PRNGKey(0)
+
+    fn = jax.jit(lambda st, tk, a, r: serve.decode_block_masked(
+        model, params, st, tk, a, r, eos, key, steps=3, window=64))
+    si, ti, ai, ri, _, toks_i, em_i = fn(state, tok, active, rem)
+
+    # functional oracle: the same loop with inplace=False steps and the
+    # full-width state_lane_select merge the old block used
+    sf, tf, af, rf = state, tok, active, rem
+    toks_f, em_f = [], []
+    for _ in range(3):
+        lf, s_new = model.decode_step(params, sf, tf, inplace=False,
+                                      window=64)
+        sf = state_lane_select(af, s_new, sf)
+        live = af & (rf > 0)
+        em = live & (tf != eos)
+        toks_f.append(np.asarray(tf))
+        em_f.append(np.asarray(em))
+        rf = rf - em.astype(rf.dtype)
+        af = em & (rf > 0)
+        tf = jnp.argmax(lf, -1).astype(tf.dtype)
+    np.testing.assert_array_equal(np.asarray(toks_i), np.stack(toks_f))
+    np.testing.assert_array_equal(np.asarray(em_i), np.stack(em_f))
+    np.testing.assert_array_equal(np.asarray(ai), np.asarray(af))
+    np.testing.assert_array_equal(np.asarray(ti), np.asarray(tf))
+    _assert_trees_equal(si, sf)
+
+
+# -- the in-place guarantee: aliasing + flat temp bytes -----------------------
+
+
+def _compiled_block(slots, steps=4, donate=False, masked=True):
+    cfg = reduced(get_config("longchat-7b"))
+    prune = baselines.unicaim(heavy=48, reserve=16, select_k=16,
+                              sink_tokens=2, recent_window=8)
+    model = Model(cfg, prune, decode_slots=slots)
+    params = model.init(jax.random.PRNGKey(0))
+    state = model.init_decode_state(B)
+    tok = jnp.zeros((B,), jnp.int32)
+    w = decode_window(48, steps, slots, prune)
+    if masked:
+        fn = lambda p, st, tk, a, r, e, k: serve.decode_block_masked(
+            model, p, st, tk, a, r, e, k, steps=steps, window=w)
+        args = (params, state, tok, jnp.ones((B,), bool),
+                jnp.full((B,), 8, jnp.int32), jnp.int32(-1),
+                jax.random.PRNGKey(0))
+        donate_argnums = (1, 2, 3, 4, 6) if donate else ()
+    else:
+        fn = lambda p, st, tk: serve.decode_block(model, p, st, tk,
+                                                  steps=steps, window=w)
+        args = (params, state, tok)
+        donate_argnums = (1, 2) if donate else ()
+    lowered = jax.jit(fn, donate_argnums=donate_argnums).lower(*args)
+    return lowered, len(jax.tree.leaves(state))
+
+
+@pytest.mark.parametrize("masked", [False, True])
+def test_block_fn_donation_surfaces_as_aliasing(masked):
+    """With donation forced on (the serve path enables it off-CPU), every
+    DecodeState buffer must alias input→output in the lowered block —
+    the windowed path no longer breaks aliasing the way the old
+    slot_window copy/merge did."""
+    lowered, n_state_leaves = _compiled_block(512, donate=True,
+                                              masked=masked)
+    text = lowered.as_text()
+    aliased = len(re.findall(r"tf\.aliasing_output", text))
+    # state leaves + tok (+ active/rem/key on the masked block)
+    assert aliased >= n_state_leaves + 1, (
+        f"only {aliased} aliased args for {n_state_leaves} state leaves")
+
+
+def test_masked_block_temp_bytes_flat_in_slots():
+    """Compiled temp allocation must NOT scale with the slot count: a
+    per-step O(slots) carry copy inside the decode scan is exactly the
+    copy floor this path exists to kill (the windowed program reads
+    [:W], so slots only contribute aliased in/out buffers)."""
+    temps = {}
+    for slots in (512, 4096):
+        lowered, _ = _compiled_block(slots)
+        ma = lowered.compile().memory_analysis()
+        temps[slots] = ma.temp_size_in_bytes
+    assert temps[4096] <= temps[512] * 1.10 + (64 << 10), (
+        f"temp bytes scale with slots: {temps} — the decode block is "
+        f"copying the cache carry again")
