@@ -20,6 +20,12 @@ Rows (CSV: name,us_per_call,derived):
   serve_prefix_reuse_<tag>  same traffic with the radix-trie prefix cache:
                             suffix-only prefills after the first request —
                             hit-rate/dedup/TTFT rows for the ISSUE gate
+  serve_priority_<tag>      mixed-priority burst (bulk priority-0 saturating
+                            every lane + a priority-5 latency burst):
+                            preemption/reservation/one-program counters —
+                            deterministic count-class rows for CI
+  serve_slo_{hi,bulk}_<tag> per-class p99/mean TTFT; the burst row adds
+                            SLO attainment against the bulk-p99 TTFT
 
 'Useful tokens' counts each request's own `max_new`: the old loop forces
 every lane in a group to the group's max budget over equally padded
@@ -96,6 +102,43 @@ def _run_continuous(model, params, reqs, lanes, rate=None, buckets="auto",
     agg = loop.aggregate()
     agg["prefill_programs"] = float(loop.prefill_programs()["loop_shapes"])
     return agg, time.perf_counter() - t0
+
+
+def _run_priority(model, params, vocab, lanes, seed=7):
+    """Mixed-priority SLO scenario: bulk (priority 0, long budgets)
+    saturates every lane and queues a second wave, then a
+    latency-sensitive burst (priority 5, short budgets) lands mid-decode.
+    Each burst request must preempt a bulk lane (exactly `lanes`
+    preemptions — deterministic: scheduling decisions depend on queue
+    counts, never the wall clock), and drain-aware reservation pre-groups
+    the requeued bulk work. Returns (per-class stats, loop, wall)."""
+    rng = np.random.default_rng(seed)
+    loop = ServeLoop(model, params, lanes=lanes, eos=-1, block=BLOCK,
+                     reserve_blocks=2)
+    for _ in range(2 * lanes):
+        loop.submit(Request(prompt=rng.integers(0, vocab, 24), max_new=32,
+                            priority=0))
+    t0 = time.perf_counter()
+    loop.schedule()                    # bulk saturates the lanes...
+    loop._step_block()                 # ...and decodes one block
+    for _ in range(lanes):             # burst arrives while all lanes busy
+        loop.submit(Request(prompt=rng.integers(0, vocab, 24), max_new=4,
+                            priority=5))
+    stats = loop.run()
+    dt = time.perf_counter() - t0
+    by_class = {}
+    for s in stats:
+        by_class.setdefault(s.priority, []).append(s)
+    return by_class, loop, dt
+
+
+def _slo_row(stats, slo_s):
+    """p99/mean TTFT + SLO attainment for one priority class."""
+    ttfts = np.asarray([s.ttft for s in stats])
+    return {"requests": float(len(stats)),
+            "p99_ttft_s": float(np.percentile(ttfts, 99)),
+            "mean_ttft_s": float(ttfts.mean()),
+            "attainment": float((ttfts <= slo_s).mean())}
 
 
 def _shared_prefix_set(vocab, n, shared=112, suffix=16, budget=6, seed=5):
@@ -264,6 +307,48 @@ def run():
                  f"prefix_dedup_ratio={agg_r['prefix_dedup_ratio']:.2f};"
                  f"prefix_copies={agg_r['prefix_copies']:.0f};"
                  f"ttft_vs_noreuse={agg_n['p50_ttft_s'] / max(agg_r['p50_ttft_s'], 1e-9):.2f}x")
+            # mixed-priority SLO scenario: a latency-sensitive burst
+            # preempts bulk lanes; per-class p99 TTFT + attainment of
+            # the burst against the bulk-median SLO, preemption and
+            # reservation counters (deterministic — count-class in CI)
+            _run_priority(model, params, cfg.vocab_size, lanes)  # warmup
+            by_class, ploop, dt_p = _run_priority(model, params,
+                                                  cfg.vocab_size, lanes)
+            # SLO: the burst must beat the bulk TAIL — despite arriving
+            # into a saturated engine, every preempting request gets its
+            # first token before the slowest bulk request got its own
+            bulk_ttfts = np.asarray([s.ttft for s in by_class[0]])
+            slo_s = float(np.percentile(bulk_ttfts, 99))
+            hi = _slo_row(by_class[5], slo_s)
+            bulk = _slo_row(by_class[0], slo_s)
+            emit(f"serve_priority_{tag}", dt_p * 1e6,
+                 f"preemptions={ploop.counters['preemptions']:.0f};"
+                 f"reservations={ploop.counters['reservations']:.0f};"
+                 f"reserved_admits={ploop.counters['reserved_admits']:.0f};"
+                 f"block_programs="
+                 f"{ploop.counters['decode_block_programs']:.0f}")
+            emit(f"serve_slo_hi_{tag}", 0.0,
+                 f"p99_ttft_s={hi['p99_ttft_s']:.4f};"
+                 f"mean_ttft_s={hi['mean_ttft_s']:.4f};"
+                 f"attainment={hi['attainment']:.2f};"
+                 f"requests={hi['requests']:.0f}")
+            emit(f"serve_slo_bulk_{tag}", 0.0,
+                 f"p99_ttft_s={bulk['p99_ttft_s']:.4f};"
+                 f"mean_ttft_s={bulk['mean_ttft_s']:.4f};"
+                 f"requests={bulk['requests']:.0f}")
+            summary.update({
+                "preemptions": float(ploop.counters["preemptions"]),
+                "reservations": float(ploop.counters["reservations"]),
+                "reserved_admits": float(
+                    ploop.counters["reserved_admits"]),
+                "decode_block_programs": float(
+                    ploop.counters["decode_block_programs"]),
+                "slo_hi_p99_ttft_s": hi["p99_ttft_s"],
+                "slo_hi_attainment": hi["attainment"],
+                "slo_bulk_p99_ttft_s": bulk["p99_ttft_s"],
+                "slo_hi_requests": hi["requests"],
+                "slo_bulk_requests": bulk["requests"],
+            })
             summary.update({
                 "prefix_requests": float(len(shared)),
                 "prefix_hit_rate": agg_r["prefix_hit_rate"],

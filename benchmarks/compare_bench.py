@@ -18,10 +18,16 @@ admission/bucketing/windowing regression, not noise); latency-style keys
 ``*reduction*``, higher is better) warn like throughput. Prefix-cache
 keys are higher-better and matched BEFORE the generic count rule:
 share-style keys (``*hit_rate*`` / ``*dedup*``, deterministic fractions
-of admissions served from cache) and reuse-count keys
-(``*copies*`` / ``*tokens_reused*`` / ``*_hits*``) warn when the fresh
-value drops below the baseline — fewer cache hits on identical traffic
-means the admission path stopped consulting or populating the trie.
+of admissions served from cache, plus ``*attain*`` SLO-attainment
+fractions) and reuse-count keys (``*copies*`` / ``*tokens_reused*`` /
+``*_hits*`` / ``*reserv*``) warn when the fresh value drops below the
+baseline — fewer cache hits or reservations on identical traffic means
+the admission path stopped consulting the trie / predicting drains.
+Scheduler counters are count-class: ``*preempt*`` (more evictions on
+the same priority traffic means the scheduler evicts lanes it should
+not) and ``*block_programs*`` (more than one compiled decode block per
+(steps, window) means the per-lane knob arrays started recompiling)
+fail under ``--fail-on-counts`` exactly like dispatch/compile counts.
 ``*_p50`` keys are sibling medians of the min-based ``*_us`` rows
 (see ``common.Timing``): they are never compared against the baseline,
 but when a fresh run's p50/min ratio exceeds ``NOISE_RATIO`` the run is
@@ -54,11 +60,13 @@ def classify(key: str) -> str:
         return "throughput"
     # prefix-cache reuse keys are HIGHER-better; they must outrank the
     # generic lower-better count rule (e.g. "copies" are not dispatches)
-    if "hit_rate" in key or "dedup" in key:
+    if "hit_rate" in key or "dedup" in key or "attain" in key:
         return "share"
-    if "copies" in key or "tokens_reused" in key or key.endswith("_hits"):
+    if "copies" in key or "tokens_reused" in key or key.endswith("_hits") \
+            or "reserv" in key:
         return "reuse"
-    if "compile" in key or "dispatch" in key or "windows" in key:
+    if "compile" in key or "dispatch" in key or "windows" in key \
+            or "preempt" in key or "block_programs" in key:
         return "count"
     if "speedup" in key or "reduction" in key:
         return "ratio"

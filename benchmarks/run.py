@@ -50,10 +50,12 @@ def main(argv=None) -> None:
         print(f"bench_{name}_total,{(time.time() - t0) * 1e6:.0f},done",
               file=sys.stderr)
     if args.smoke:
-        # cross-PR trajectory: committed baseline history + this run
+        # cross-PR trajectory: committed baseline history + this run,
+        # tabulated to stdout and plotted to BENCH_trajectory.{svg,png}
+        # (CI uploads the pair with the BENCH_*.json artifacts)
         from benchmarks import trajectory
         print()
-        trajectory.main([])
+        trajectory.main(["--plot"])
 
 
 if __name__ == "__main__":

@@ -9,9 +9,14 @@ committed column), and is appended to the ``benchmarks/run.py --smoke``
 output so every CI bench run shows where the numbers came from, not
 just where they are.
 
+``--plot`` additionally renders the same series to a
+``BENCH_trajectory.svg`` + ``.png`` pair (``--plot-out`` overrides the
+path) — the artifact CI uploads next to the ``BENCH_*.json`` files; the
+table never depends on matplotlib being importable.
+
 Standalone::
 
-    python benchmarks/trajectory.py [--revs 6] [names...]
+    python benchmarks/trajectory.py [--revs 6] [--plot] [names...]
 
 Wall-clock caveat: columns come from different machines/runs — the
 trajectory shows direction and order of magnitude, not tight ratios
@@ -37,6 +42,9 @@ KEY_PREFIXES = {
     "serve": ("tok_s", "chunked_tok_s", "grouped_admit_tok_s",
               "seq_admit_tok_s", "prefix_reuse_tok_s", "prefill_compiles",
               "grouped_prefill_dispatches", "prefix_dedup_ratio",
+              "preemptions", "reservations", "reserved_admits",
+              "decode_block_programs", "slo_hi_p99_ttft_s",
+              "slo_hi_attainment", "slo_bulk_p99_ttft_s",
               "donation"),
     "aedp": ("speedup", "reduction", "tok_s"),
 }
@@ -81,17 +89,22 @@ def _fmt(v) -> str:
     return "?"
 
 
+def _load_fresh(name: str):
+    """The current run's ./BENCH_<name>.json, None when absent/bad."""
+    fresh_path = os.path.join(os.getcwd(), f"BENCH_{name}.json")
+    if not os.path.exists(fresh_path):
+        return None
+    try:
+        with open(fresh_path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
 def table(name: str, revs: int = 6) -> str:
     """Markdown-ish trajectory table for one bench, '' when no data."""
     cols = history(name, revs)
-    fresh_path = os.path.join(os.getcwd(), f"BENCH_{name}.json")
-    fresh = None
-    if os.path.exists(fresh_path):
-        try:
-            with open(fresh_path) as f:
-                fresh = json.load(f)
-        except (OSError, json.JSONDecodeError):
-            fresh = None
+    fresh = _load_fresh(name)
     if not cols and fresh is None:
         return ""
     prefixes = KEY_PREFIXES.get(name, ())
@@ -124,6 +137,66 @@ def table(name: str, revs: int = 6) -> str:
     return "\n".join(lines)
 
 
+def plot(names, revs: int = 6, out: str = "BENCH_trajectory.svg"):
+    """Render the cross-PR series to an SVG + PNG pair (the CI
+    artifact): one panel per bench, one line per headline metric over
+    the committed-baseline columns (+ the fresh run when present).
+    symlog y-axis — the panels mix tok/s in the thousands with counters
+    near zero. Returns the written paths; [] when matplotlib or the
+    data is unavailable (the table path never depends on it)."""
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except Exception:                          # no plotting backend: skip
+        return []
+    panels = []
+    for name in names:
+        cols = history(name, revs)
+        fresh = _load_fresh(name)
+        if fresh is not None:
+            cols = cols + [("fresh", fresh)]
+        prefixes = KEY_PREFIXES.get(name, ())
+        series = {}
+        for i, (_, d) in enumerate(cols):
+            for k, v in d.items():
+                if (isinstance(v, (int, float)) and not isinstance(v, bool)
+                        and (not prefixes
+                             or any(k.startswith(p) for p in prefixes))):
+                    series.setdefault(k, {})[i] = float(v)
+        if series and len(cols) >= 2:
+            panels.append((name, [r for r, _ in cols], series))
+    if not panels:
+        return []
+    fig, axes = plt.subplots(1, len(panels),
+                             figsize=(5.5 * len(panels), 4.5),
+                             squeeze=False)
+    for ax, (name, labels, series) in zip(axes[0], panels):
+        for k, pts in sorted(series.items()):
+            xs = sorted(pts)
+            ax.plot(xs, [pts[x] for x in xs], marker="o", ms=3, lw=1,
+                    label=k)
+        ax.set_yscale("symlog", linthresh=1e-3)
+        ax.set_title(f"BENCH_{name}", fontsize=10)
+        ax.set_xticks(range(len(labels)))
+        ax.set_xticklabels(labels, rotation=45, fontsize=7)
+        ax.grid(True, alpha=0.3)
+        ax.legend(fontsize=6, loc="best")
+    fig.suptitle("cross-PR bench trajectory (committed baselines → fresh)",
+                 fontsize=11)
+    fig.tight_layout()
+    paths = []
+    for ext in (".svg", ".png"):
+        p = os.path.splitext(out)[0] + ext
+        try:
+            fig.savefig(p)
+            paths.append(p)
+        except OSError:
+            pass
+    plt.close(fig)
+    return paths
+
+
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
     revs = 6
@@ -131,6 +204,14 @@ def main(argv=None) -> int:
         i = argv.index("--revs")
         revs = int(argv[i + 1])
         argv = argv[:i] + argv[i + 2:]
+    do_plot = "--plot" in argv
+    argv = [a for a in argv if a != "--plot"]
+    out = "BENCH_trajectory.svg"
+    if "--plot-out" in argv:
+        i = argv.index("--plot-out")
+        out = argv[i + 1]
+        argv = argv[:i] + argv[i + 2:]
+        do_plot = True
     names = argv
     if not names and os.path.isdir(BASE_DIR):
         names = sorted(
@@ -144,6 +225,10 @@ def main(argv=None) -> int:
             shown += 1
     if not shown:
         print("no committed baselines or fresh BENCH_*.json found")
+    if do_plot:
+        paths = plot(names, revs, out)
+        print("trajectory plot: " + (", ".join(paths) if paths
+                                     else "skipped (no matplotlib/data)"))
     return 0
 
 

@@ -23,6 +23,20 @@ mixed traffic. This is the paper's target regime: memory-bound
 autoregressive decoding where per-token Python dispatch otherwise
 dominates the step time.
 
+Serving knobs are **per-lane runtime state**: temperature/top-k/top-p,
+the stop token, the remaining budget, and the PRNG carry are all
+[lanes]-shaped arrays threaded through the scanned block
+(`decode_block_lanes`), so ONE compiled program per (steps, window)
+serves any mix of greedy and sampled lanes — per-request
+`SamplingParams` are honoured across the whole stream, not just the
+admission-seeded first token, and knob values never recompile. The
+scheduler is drain-aware (predicts lane free-times from remaining
+budgets + observed EOS lengths and reserves/pre-groups queued requests
+so admission fires the moment lanes free) and priority-preemptive (a
+higher-priority arrival may evict the lowest-priority lane via
+`lane_slice` capture; the victim requeues and later resumes
+token-identically).
+
 Requests enter through the keyword-only `Request` dataclass
 (`submit(Request(prompt=..., max_new=...)) -> RequestHandle`); the
 positional `submit(prompt, max_new, arrival)` shim and the all-lanes
@@ -54,7 +68,8 @@ from repro.core import baselines
 from repro.launch.prefix_cache import PrefixCache, RowsEntry, StateEntry
 from repro.models.transformer import Model
 from repro.surgery import (cache_prefix_rows, state_lane_insert,
-                           state_lane_select, state_lanes_insert)
+                           state_lane_select, state_lane_slice,
+                           state_lanes_insert)
 
 
 # ---------------------------------------------------------------------------
@@ -237,6 +252,104 @@ def decode_block_masked(model: Model, params, state, tok, active, rem,
     return state, tok, active, rem, key, toks, emitted
 
 
+def _next_token_lanes(logits, keys, temperature, top_k, top_p):
+    """Vectorized per-lane next-token rule: every knob is a RUNTIME array.
+
+    logits [B, V]; keys [B, 2] per-lane PRNG subkeys; temperature/top_k/
+    top_p [B]-shaped traced arrays — one compiled program serves any mix
+    of greedy and sampled lanes, so knob values never recompile. Per-row
+    semantics match `_next_token`: rows with temperature <= 0 take the
+    bitwise argmax of the RAW logits (key unused); sampled rows truncate
+    to the top_k highest logits first (top_k <= 0 disables — the kth
+    threshold comes from one descending sort instead of `lax.top_k`,
+    whose k must be static), then to the minimal top-p nucleus (top_p
+    outside (0, 1) disables), then draw categorical(logits/temperature)
+    with the row's own key.
+    """
+    v = logits.shape[-1]
+    greedy = temperature <= 0.0
+    t = jnp.where(greedy, 1.0, temperature)[:, None]       # no div-by-0
+    sl = jnp.sort(logits, axis=-1)[..., ::-1]              # descending
+    kth = jnp.take_along_axis(sl, (jnp.clip(top_k, 1, v) - 1)[:, None],
+                              axis=-1)                     # [B, 1]
+    use_k = (top_k > 0)[:, None]
+    lg = jnp.where(use_k & (logits < kth), -jnp.inf, logits)
+    # masking the tail of an already-sorted row keeps it sorted, so the
+    # nucleus scan runs over the top-k-truncated distribution directly
+    sl = jnp.where(use_k & (sl < kth), -jnp.inf, sl)
+    p = jax.nn.softmax(sl / t, axis=-1)
+    keep = jnp.cumsum(p, axis=-1) - p < top_p[:, None]
+    cut = jnp.min(jnp.where(keep, sl, jnp.inf), -1, keepdims=True)
+    use_p = ((top_p > 0.0) & (top_p < 1.0))[:, None]
+    lg = jnp.where(use_p & (lg < cut), -jnp.inf, lg)
+    sampled = jax.vmap(jax.random.categorical)(keys, lg / t)
+    return jnp.where(greedy, jnp.argmax(logits, -1), sampled)
+
+
+def decode_block_lanes(model: Model, params, state, tok, active, rem,
+                       eos, keys, temperature, top_k, top_p, steps: int,
+                       window: Optional[int] = None):
+    """`steps` decode steps with per-lane termination AND per-lane
+    sampling knobs — the engine's decode block.
+
+    Same in-device termination contract as `decode_block_masked`, but
+    every serving knob is a [B]-shaped RUNTIME array: `eos` (per-lane
+    stop token; ids are >= 0 so -1 never matches), `temperature`/
+    `top_k`/`top_p` (per-lane sampling, `_next_token_lanes` semantics),
+    and `keys` ([B, 2] uint32 per-lane PRNG carries, split once per
+    scanned step). The jit cache is keyed on (steps, window) ONLY — one
+    compiled program serves arbitrary knob mixes.
+
+    Greedy guarantees: a lane with temperature <= 0 emits the bitwise
+    argmax stream (identical to `decode_block_masked`'s greedy path),
+    and when NO resident lane samples a `lax.cond` skips the sampler —
+    an all-greedy engine carries no RNG work and leaves `keys`
+    untouched. When any lane samples, every lane's key advances once
+    per step via its OWN split chain, so a lane's sampled stream is a
+    function of (its initial key, steps resident) alone — independent
+    of its neighbours, its lane index, and any preempt/resume boundary.
+    Returns (state, tok, active, rem, keys, toks [steps, B],
+    emitted [steps, B]).
+    """
+    inplace = model.supports_inplace_decode()
+    eos = jnp.asarray(eos, jnp.int32)
+    temperature = jnp.asarray(temperature, jnp.float32)
+    top_k = jnp.asarray(top_k, jnp.int32)
+    top_p = jnp.asarray(top_p, jnp.float32)
+    sampled_any = jnp.any(temperature > 0.0)
+
+    def body(carry, _):
+        state, tok, active, rem, keys = carry
+        if inplace:
+            logits, state = model.decode_step(params, state, tok,
+                                              window=window, active=active)
+        else:
+            logits, new_state = model.decode_step(params, state, tok,
+                                                  window=window)
+            state = state_lane_select(active, new_state, state)
+        live = active & (rem > 0)
+        emit = live & (tok != eos)
+        rem = rem - emit.astype(rem.dtype)
+        active = emit & (rem > 0)
+
+        def sample(keys):
+            ks = jax.vmap(jax.random.split)(keys)          # [B, 2, 2]
+            nxt = _next_token_lanes(logits, ks[:, 1], temperature,
+                                    top_k, top_p)
+            return ks[:, 0], nxt
+
+        def greedy(keys):
+            return keys, jnp.argmax(logits, -1)
+
+        keys, nxt = jax.lax.cond(sampled_any, sample, greedy, keys)
+        return (state, nxt.astype(tok.dtype), active, rem, keys), (tok,
+                                                                   emit)
+
+    (state, tok, active, rem, keys), (toks, emitted) = jax.lax.scan(
+        body, (state, tok, active, rem, keys), None, length=steps)
+    return state, tok, active, rem, keys, toks, emitted
+
+
 def donation_mode() -> str:
     """Whether jit buffer donation is honoured on this backend: ``"on"``,
     or ``"cpu-noop"`` where `_donate_argnums` silently disables it (the
@@ -293,6 +406,44 @@ def _masked_block_fn(key, steps: int, temperature: float = 0.0,
     return jax.jit(fn, donate_argnums=_donate_argnums(1, 2, 3, 4, 6))
 
 
+@functools.lru_cache(maxsize=64)
+def _lanes_block_fn(key, steps: int, window: Optional[int] = None):
+    # the engine's decode block — keyed on (steps, window) ONLY. eos,
+    # the per-lane PRNG carries, and every sampling knob are runtime
+    # [lanes]-shaped arguments, so one compiled program serves arbitrary
+    # per-lane knob mixes (the windows axis still adds at most
+    # log2(slots) programs per steps value). The scan carries (state,
+    # tok, active, rem, keys) are donated wherever donation is honoured.
+    model = _rebuild(*key)
+    fn = functools.partial(decode_block_lanes, model, steps=steps,
+                           window=window)
+    return jax.jit(fn, donate_argnums=_donate_argnums(1, 2, 3, 4, 6))
+
+
+@functools.lru_cache(maxsize=32)
+def _lane_slice_fn(key):
+    # preemption capture: one batch-1 DecodeState slice per model key
+    # (the lane index is traced — one program covers every lane)
+    del key
+    return jax.jit(state_lane_slice)
+
+
+def _resume_lane_state(state, tok, lane, fresh, next_tok):
+    """Preemption resume: splice the captured batch-1 state back into a
+    free lane and restore its carried (not-yet-emitted) next token —
+    the exact inverse of the `_lane_slice_fn` capture, so the resumed
+    stream continues token-identically (state/tok donated in place)."""
+    state = state_lane_insert(state, lane, fresh)
+    tok = tok.at[lane].set(next_tok.astype(tok.dtype))
+    return state, tok
+
+
+@functools.lru_cache(maxsize=4)
+def _resume_fn():
+    return jax.jit(_resume_lane_state,
+                   donate_argnums=_donate_argnums(0, 1))
+
+
 @functools.lru_cache(maxsize=32)
 def _prefill_fn(key):
     return jax.jit(_rebuild(*key).prefill)
@@ -339,48 +490,47 @@ def _jit_decode_block(model: Model, steps: int):
 
 
 def _admit_lane_state(state, tok, lane, fresh, logits, key,
-                      temperature: float = 0.0, top_k: int = 0,
-                      top_p: float = 0.0):
+                      temperature, top_k, top_p):
     """One-dispatch admission: splice `fresh` into `lane` and seed its
-    first token from the prefill logits — via the engine's next-token
-    rule, so sampling covers the FIRST generated token too, not just the
-    scanned steps (state/tok donated in place; key unused when greedy)."""
+    first token from the prefill logits — via the engine's vectorized
+    next-token rule, so sampling covers the FIRST generated token too.
+    temperature/top_k/top_p are [1]-shaped RUNTIME arrays: one compiled
+    program per bucket shape serves every override value (state/tok
+    donated in place; key unused when the row is greedy)."""
     state = state_lane_insert(state, lane, fresh)
-    seed = _next_token(logits, key, temperature, top_k, top_p)
+    seed = _next_token_lanes(logits[None], key[None], temperature,
+                             top_k, top_p)[0]
     tok = tok.at[lane].set(seed.astype(tok.dtype))
     return state, tok
 
 
-@functools.lru_cache(maxsize=8)
-def _admit_fn(temperature: float = 0.0, top_k: int = 0,
-              top_p: float = 0.0):
-    fn = functools.partial(_admit_lane_state, temperature=temperature,
-                           top_k=top_k, top_p=top_p)
-    return jax.jit(fn, donate_argnums=_donate_argnums(0, 1))
+@functools.lru_cache(maxsize=2)
+def _admit_fn():
+    return jax.jit(_admit_lane_state,
+                   donate_argnums=_donate_argnums(0, 1))
 
 
-def _admit_group_state(state, tok, src, fresh, logits, key,
-                       temperature: float = 0.0, top_k: int = 0,
-                       top_p: float = 0.0):
+def _admit_group_state(state, tok, src, fresh, logits, keys,
+                       temperature, top_k, top_p):
     """One-dispatch grouped admission: splice every mapped row of the
     batch-G `fresh` state into the live state (`lanes_insert` over the
     whole pytree) and seed each spliced lane's first token from its row
-    of the group-prefill logits (sampled per row when temperature > 0).
-    `src` maps live lane -> fresh row (-1 = lane untouched); state/tok
-    donated in place."""
+    of the group-prefill logits. keys [G, 2] and the [G]-shaped sampling
+    knobs are RUNTIME arrays — each row draws from its own request's
+    stream, and knob values never recompile. `src` maps live lane ->
+    fresh row (-1 = lane untouched); state/tok donated in place."""
     state = state_lanes_insert(state, src, fresh)
-    seeded = _next_token(logits, key, temperature, top_k, top_p)   # [G]
+    seeded = _next_token_lanes(logits, keys, temperature, top_k,
+                               top_p)                              # [G]
     picked = jnp.take(seeded.astype(tok.dtype), jnp.maximum(src, 0))
     tok = jnp.where(src >= 0, picked, tok)
     return state, tok
 
 
-@functools.lru_cache(maxsize=8)
-def _admit_group_fn(temperature: float = 0.0, top_k: int = 0,
-                    top_p: float = 0.0):
-    fn = functools.partial(_admit_group_state, temperature=temperature,
-                           top_k=top_k, top_p=top_p)
-    return jax.jit(fn, donate_argnums=_donate_argnums(0, 1))
+@functools.lru_cache(maxsize=2)
+def _admit_group_fn():
+    return jax.jit(_admit_group_state,
+                   donate_argnums=_donate_argnums(0, 1))
 
 
 def generate_scan(model: Model, params, batch, steps: int):
@@ -403,15 +553,17 @@ def generate_scan(model: Model, params, batch, steps: int):
 @dataclasses.dataclass(frozen=True)
 class SamplingParams:
     """Per-request sampling override (same knobs as the loop-level
-    `temperature`/`top_k`/`top_p`). Applied to the request's FIRST
-    generated token — the admission-seeding dispatch is per-request, so
-    it can honour arbitrary overrides — while the scanned decode block
-    keeps the engine-wide knobs (one compiled program serves all lanes;
-    a per-lane sampler in the scan would multiply the jit cache).
-    Requests carrying an override are admitted solo, never grouped."""
+    `temperature`/`top_k`/`top_p`, plus an optional per-request stop
+    token `eos`). Honoured across the request's WHOLE stream: the
+    admission-seeded first token and every scanned decode step — the
+    block's knobs are [lanes]-shaped runtime arrays, so arbitrary
+    overrides share one compiled program and never recompile. Requests
+    carrying an override are still admitted solo (the seeding draw is
+    per-request), then decode mixed with everyone else."""
     temperature: float = 0.0
     top_k: int = 0
     top_p: float = 0.0
+    eos: Optional[int] = None        # None → the loop's eos
 
 
 @dataclasses.dataclass(eq=False, kw_only=True)
@@ -420,23 +572,31 @@ class Request:
 
     `arrival` is seconds from `run()` start (0 = already waiting);
     `submit()` keeps the queue arrival-ordered. `sampling` overrides the
-    loop's sampling knobs for this request's seeded first token;
-    `sample_seed` pins its PRNG stream (both force solo admission).
-    `reuse_prefix=False` opts the request out of the prefix cache in
-    both directions: its admission never matches a cached prefix and its
-    prefill is never inserted as a donor. Identity-compared (eq=False):
-    the scheduler removes grouped requests from the queue by identity,
-    and field equality over an ndarray prompt is ill-defined anyway."""
+    loop's sampling knobs for this request's whole stream (seeded first
+    token + every scanned step); `sample_seed` pins its PRNG stream
+    (both force solo admission — the seeding draw is per-request — but
+    decode runs mixed). `priority` (higher = more urgent, default 0)
+    picks the scheduling class: higher classes are admitted first and
+    may PREEMPT the lowest-priority active lane when no lane is free
+    (the victim's state is captured and it resumes token-identically
+    later). `reuse_prefix=False` opts the request out of the prefix
+    cache in both directions: its admission never matches a cached
+    prefix and its prefill is never inserted as a donor.
+    Identity-compared (eq=False): the scheduler removes grouped requests
+    from the queue by identity, and field equality over an ndarray
+    prompt is ill-defined anyway."""
     prompt: np.ndarray
     max_new: Optional[int] = None        # None → the loop's default
     arrival: float = 0.0
     sample_seed: Optional[int] = None
     sampling: Optional[SamplingParams] = None
+    priority: int = 0
     reuse_prefix: bool = True
     # engine-assigned fields — never pass these to the constructor
     rid: int = -1
     bucket: int = 0            # memoized pad width under the loop's grid
     admitted: bool = False     # lazy-prune marker for the FIFO-order deque
+    resume: Optional["_ResumeState"] = None   # set while preempted
 
 
 class RequestHandle:
@@ -487,6 +647,8 @@ class RequestStats:
     group_size: int = 1        # requests sharing this admission dispatch
     prefix_tokens: int = 0     # prompt tokens served from the prefix cache
     prefix_exact: bool = False  # whole prompt hit (state splice, no prefill)
+    priority: int = 0          # scheduling class (higher = more urgent)
+    preemptions: int = 0       # times this request was evicted + requeued
 
     @property
     def latency(self) -> float:
@@ -500,6 +662,22 @@ class RequestStats:
     @property
     def decode_tps(self) -> float:
         return len(self.tokens) / max(self.t_done - self.t_admit, 1e-9)
+
+
+@dataclasses.dataclass
+class _ResumeState:
+    """One preempted lane, captured exact to the token: the batch-1
+    DecodeState slice (`_lane_slice_fn`), the carried not-yet-emitted
+    next token, the unspent budget, the lane's PRNG carry, and the
+    tokens emitted so far. `_admit_resumed` splices it back with zero
+    prefill work; because the block advances a lane's key once per
+    resident step, the resumed stream is token-identical to an
+    uninterrupted run — greedy AND seeded-sampled lanes alike."""
+    state: Any                 # batch-1 DecodeState (device)
+    tok: int                   # next token to emit (block carry)
+    rem: int                   # unspent budget
+    key: np.ndarray            # [2] uint32 per-lane PRNG carry
+    outputs: List[int]         # tokens emitted before the eviction
 
 
 @dataclasses.dataclass
@@ -627,12 +805,29 @@ class ServeLoop:
     logits/temperature (optionally truncated to the top_k most likely
     tokens and/or the minimal top-p nucleus per lane, top-k first) —
     covering the admission-seeded FIRST token as well as the scanned
-    decode steps — with the PRNG key threaded through the scan carry
-    and advanced once per generated step; `sample_seed` pins the
-    stream. The stream consumption order follows the dispatch schedule,
-    so grouped and sequential admission draw different (equally valid)
-    samples. Greedy (temperature=0, the default) stays bitwise-unchanged
-    and carries no RNG.
+    decode steps. The loop scalars are just per-lane DEFAULTS: every
+    knob (plus the stop token and the PRNG carry) lives in a
+    [lanes]-shaped runtime array fed to `decode_block_lanes`, and a
+    request's `SamplingParams` override rides its lane for the whole
+    stream. Each lane carries its OWN PRNG key (seeded from
+    `sample_seed` pins via `jax.random.PRNGKey(seed)`, otherwise drawn
+    from the loop stream at admission) and the block splits it once per
+    scanned step — so a seeded request's sampled stream depends only on
+    (seed, tokens generated): identical whether it runs solo, grouped,
+    on any lane, or across a preempt/resume boundary. Greedy
+    (temperature=0, the default) stays bitwise-unchanged and carries no
+    RNG; knob values never recompile the block.
+
+    **Drain-aware reservation + priority preemption.** See
+    `predicted_free_blocks`, `_reserve`, and `_try_preempt`:
+    with every lane busy, the scheduler predicts which lanes free
+    within `reserve_blocks` decode blocks (remaining budgets bounded by
+    the observed mean EOS-termination length) and pops that many queued
+    requests ahead of time, so the grouped prefill fires the moment the
+    lanes actually free; and a waiting request whose `priority` strictly
+    outranks the lowest-priority active lane evicts that lane
+    (`lane_slice` capture → requeue → token-identical resume). The
+    `preemptions`/`reservations`/`reserved_admits` counters track both.
 
     **Scheduler cost.** The queue is per-bucket FIFO deques plus an
     arrival spill list: each `schedule()` round drains newly-arrived
@@ -659,7 +854,7 @@ class ServeLoop:
                  eos: int = -1, block: int = 1,
                  buckets: Union[str, Sequence[int], None] = "auto",
                  chunk_prefill: int = 0, group_admit: bool = True,
-                 max_head_skips: int = 8,
+                 max_head_skips: int = 8, reserve_blocks: int = 1,
                  temperature: float = 0.0, top_k: int = 0,
                  top_p: float = 0.0, sample_seed: int = 0,
                  window: Union[str, None] = "auto",
@@ -682,6 +877,8 @@ class ServeLoop:
         self.group_admit = bool(group_admit)
         self.max_head_skips = max(0, max_head_skips)
         self._head_skips = 0
+        # drain-aware reservation horizon, in decode blocks (0 = off)
+        self.reserve_blocks = max(0, reserve_blocks)
         self.temperature = float(temperature)
         self.top_k = int(top_k)
         self.top_p = float(top_p)
@@ -708,14 +905,30 @@ class ServeLoop:
         self.remaining = np.zeros(lanes, np.int32)
         self.outputs: List[List[int]] = [[] for _ in range(lanes)]
         self.done: List[List[int]] = []
+        # Per-lane serving knobs — RUNTIME arrays fed to the decode
+        # block every dispatch (loop scalars are just the defaults a
+        # request without overrides inherits). `_lane_keys` holds the
+        # per-lane PRNG carries the block splits once per scanned step.
+        self.lane_temp = np.full(lanes, self.temperature, np.float32)
+        self.lane_topk = np.full(lanes, self.top_k, np.int32)
+        self.lane_topp = np.full(lanes, self.top_p, np.float32)
+        self.lane_eos = np.full(lanes, self.eos, np.int32)
+        self._lane_keys = np.broadcast_to(
+            np.asarray(self._key, np.uint32), (lanes, 2)).copy()
+        self._lane_prio = np.zeros(lanes, np.int64)
         # Scheduler state: `_arrivals` holds not-yet-arrived requests in
         # arrival order; once arrived they move into their bucket's FIFO
         # deque (`_bucket_q`) and onto `_arrived_fifo` (arrival order,
         # admitted entries lazily pruned — Request.admitted flags them).
         self._arrivals: Deque[Request] = deque()
-        self._bucket_q: Dict[int, Deque[Request]] = {}
+        # keyed by (-priority, bucket): min() picks the highest class
+        # first, shortest bucket within it — all-default-priority
+        # traffic reduces to plain shortest-bucket ordering
+        self._bucket_q: Dict[Tuple[int, int], Deque[Request]] = {}
         self._arrived_fifo: Deque[Request] = deque()
         self._arrived_count = 0
+        self._reserved: Deque[Request] = deque()   # drain-aware pre-group
+        self._req_by_rid: Dict[int, Request] = {}
         self._drained_hwm = float("-inf")     # newest arrival drained
         self.stats: Dict[int, RequestStats] = {}
         self.completed: List[RequestStats] = []
@@ -725,6 +938,11 @@ class ServeLoop:
         self._pending: Optional[_ChunkedPrefill] = None
         self._prefill_shapes: set = set()     # (kind, width) seen this loop
         self._admit_seq = 0
+        # drain-prediction inputs: generated lengths of EOS-terminated
+        # requests vs. count of budget-exhausted ones (see
+        # `predicted_free_blocks`)
+        self._eos_lens: List[int] = []
+        self._budget_done = 0
         self._finished: set = set()           # rids with t_done recorded
         self.prefix_cache: Optional[PrefixCache] = (
             PrefixCache(prefix_cache_bytes) if prefix_cache_bytes > 0
@@ -747,7 +965,8 @@ class ServeLoop:
             "prefill_dispatches": 0, "admit_dispatches": 0,
             "chunk_dispatches": 0, "decode_blocks": 0,
             "grouped_admissions": 0, "grouped_requests": 0,
-            "decode_windows": 0,
+            "decode_windows": 0, "decode_block_programs": 0,
+            "preemptions": 0, "reservations": 0, "reserved_admits": 0,
             "donation": donation_mode(),
             "prefix_lookups": 0, "prefix_hits": 0,
             "prefix_exact_hits": 0, "prefix_copies": 0,
@@ -793,6 +1012,7 @@ class ServeLoop:
             req.max_new = self.max_new
         req.rid = self._next_rid
         self._next_rid += 1
+        self._req_by_rid[req.rid] = req
         arrival = float(req.arrival)
         req.bucket = self._bucket_of(req)     # memoized for the scheduler
         if arrival < self._drained_hwm:
@@ -810,8 +1030,13 @@ class ServeLoop:
         else:
             self._arrivals.append(req)
         self.stats[req.rid] = RequestStats(req.rid, len(req.prompt),
-                                           req.max_new, t_arrival=arrival)
+                                           req.max_new, t_arrival=arrival,
+                                           priority=req.priority)
         return RequestHandle(self, req.rid)
+
+    def _qkey(self, req: Request) -> Tuple[int, int]:
+        """Scheduling-class deque key: sorts as (-priority, bucket)."""
+        return (-req.priority, req.bucket)
 
     def _insert_arrived(self, req: Request) -> None:
         """Insert at arrival rank (after ties) into the arrived deques."""
@@ -821,7 +1046,7 @@ class ServeLoop:
                     return i
             return len(dq)
         self._arrived_fifo.insert(rank(self._arrived_fifo), req)
-        dq = self._bucket_q.setdefault(req.bucket, deque())
+        dq = self._bucket_q.setdefault(self._qkey(req), deque())
         dq.insert(rank(dq), req)
         self._arrived_count += 1
 
@@ -839,7 +1064,7 @@ class ServeLoop:
         exactly once over the loop's lifetime."""
         while self._arrivals and self._arrivals[0].arrival <= now:
             req = self._arrivals.popleft()
-            self._bucket_q.setdefault(req.bucket, deque()).append(req)
+            self._bucket_q.setdefault(self._qkey(req), deque()).append(req)
             self._arrived_fifo.append(req)
             self._arrived_count += 1
             self._drained_hwm = max(self._drained_hwm, req.arrival)
@@ -853,16 +1078,19 @@ class ServeLoop:
 
     @staticmethod
     def _needs_solo(req: Request) -> bool:
-        """Per-request sampling/seed overrides apply at the admission-
-        seeding dispatch, which is per-request — so such a request never
-        shares a grouped admission."""
-        return req.sampling is not None or req.sample_seed is not None
+        """Per-request sampling/seed overrides draw their seed at the
+        admission-seeding dispatch, which is per-request — so such a
+        request never shares a grouped admission (it still decodes mixed
+        with everyone else). A preempted request resuming splices its
+        captured state instead of prefilling, so it is always solo."""
+        return (req.sampling is not None or req.sample_seed is not None
+                or req.resume is not None)
 
-    def _take_bucket(self, bucket: int, n: int) -> List[Request]:
-        """Pop up to `n` FIFO requests from one bucket's deque; a request
-        carrying sampling overrides terminates (or solely forms) the
-        group so it is admitted through its own seeding dispatch."""
-        dq = self._bucket_q.get(bucket)
+    def _take_bucket(self, key: Tuple[int, int], n: int) -> List[Request]:
+        """Pop up to `n` FIFO requests from one class deque; a request
+        needing a solo admission (sampling overrides / a resume splice)
+        terminates (or solely forms) the group."""
+        dq = self._bucket_q.get(key)
         group: List[Request] = []
         while dq and len(group) < n:
             if group and self._needs_solo(dq[0]):
@@ -873,8 +1101,23 @@ class ServeLoop:
             if self._needs_solo(req):
                 break
         if dq is not None and not dq:
-            del self._bucket_q[bucket]
+            del self._bucket_q[key]
         self._arrived_count -= len(group)
+        return group
+
+    def _take_reserved(self, n: int) -> List[Request]:
+        """Pop a same-bucket prefix of the reservation queue (≤ n), with
+        the same solo boundaries as `_take_bucket`."""
+        rq = self._reserved
+        group: List[Request] = []
+        while rq and len(group) < n:
+            if group and (self._needs_solo(rq[0])
+                          or rq[0].bucket != group[0].bucket):
+                break
+            req = rq.popleft()
+            group.append(req)
+            if self._needs_solo(req):
+                break
         return group
 
     # -- admission -----------------------------------------------------------
@@ -939,28 +1182,39 @@ class ServeLoop:
             return self.temperature, self.top_k, self.top_p
         return float(sp.temperature), int(sp.top_k), float(sp.top_p)
 
-    def _seed_key(self, req: Request):
-        """PRNG key for one request's admission seed: a pinned stream
-        when `sample_seed` is set, else the loop stream (advanced only
-        when the effective temperature actually samples)."""
-        if req.sample_seed is not None:
-            return jax.random.PRNGKey(req.sample_seed)
+    def _seed_keys(self, req: Request):
+        """(admission draw key, lane PRNG carry) for one request. A
+        pinned `sample_seed` derives both from PRNGKey(seed); otherwise
+        from the loop stream — advanced only when the effective
+        temperature actually samples, so greedy admissions leave the
+        stream untouched (and both keys unused in-device). The lane
+        carry is what the decode block splits once per scanned step:
+        a seeded request's sampled stream is a function of (seed,
+        tokens generated) alone — identical solo, grouped, on any lane,
+        or across a preempt/resume boundary."""
         if self._req_sampling(req)[0] <= 0:
-            return self._key
-        self._key, sub = jax.random.split(self._key)
-        return sub
+            return self._key, self._key        # unused in-device
+        if req.sample_seed is not None:
+            base = jax.random.PRNGKey(req.sample_seed)
+        else:
+            self._key, base = jax.random.split(self._key)
+        draw, carry = jax.random.split(base)
+        return draw, carry
 
     def _splice(self, lane: int, req: Request, logits, fresh,
                 bucket: int, prefill_chunks: int = 1,
                 prefix_tokens: int = 0):
         """Insert a freshly prefilled batch-1 state into a free lane."""
         t, k, p = self._req_sampling(req)
-        self.state, self.tok = _admit_fn(t, k, p)(
-            self.state, self.tok, lane, fresh, logits, self._seed_key(req))
+        draw, carry = self._seed_keys(req)
+        self.state, self.tok = _admit_fn()(
+            self.state, self.tok, lane, fresh, logits, draw,
+            jnp.asarray([t], jnp.float32), jnp.asarray([k], jnp.int32),
+            jnp.asarray([p], jnp.float32))
         self.counters["admit_dispatches"] += 1
         self._register_admit(lane, req, bucket=bucket,
                              prefill_chunks=prefill_chunks,
-                             prefix_tokens=prefix_tokens)
+                             prefix_tokens=prefix_tokens, lane_key=carry)
 
     # -- prefix cache --------------------------------------------------------
 
@@ -993,15 +1247,17 @@ class ServeLoop:
         so a greedy twin of the original request reproduces its stream."""
         fresh = jax.tree.map(jnp.asarray, entry.state)
         t, k, p = self._req_sampling(req)
-        self.state, self.tok = _admit_fn(t, k, p)(
+        draw, carry = self._seed_keys(req)
+        self.state, self.tok = _admit_fn()(
             self.state, self.tok, lane, fresh, jnp.asarray(entry.logits),
-            self._seed_key(req))
+            draw, jnp.asarray([t], jnp.float32),
+            jnp.asarray([k], jnp.int32), jnp.asarray([p], jnp.float32))
         self.counters["admit_dispatches"] += 1
         self.counters["prefix_copies"] += 1
         self.counters["prefix_tokens_reused"] += entry.length
         self._register_admit(lane, req, bucket=entry.bucket,
                              prefill_chunks=0, prefix_tokens=entry.length,
-                             prefix_exact=True)
+                             prefix_exact=True, lane_key=carry)
 
     def _sync_cache_counters(self):
         pc = self.prefix_cache
@@ -1068,24 +1324,66 @@ class ServeLoop:
                                                 jnp.asarray(rows),
                                                 jnp.asarray(lengths))
         self.counters["prefill_dispatches"] += 1
-        self.state, self.tok = _admit_group_fn(
-            self.temperature, self.top_k, self.top_p)(
+        # per-row seeding: each request draws from its OWN stream and
+        # gets its own lane PRNG carry (pad rows mirror row 0 — their
+        # draws are dropped by the splice's source map anyway)
+        t_arr = np.empty(gp, np.float32)
+        k_arr = np.empty(gp, np.int32)
+        p_arr = np.empty(gp, np.float32)
+        draws = np.empty((gp, 2), np.uint32)
+        carries: List[np.ndarray] = []
+        for i, r in enumerate(group):
+            t_arr[i], k_arr[i], p_arr[i] = self._req_sampling(r)
+            draw, carry = self._seed_keys(r)
+            draws[i] = np.asarray(draw, np.uint32)
+            carries.append(np.asarray(carry, np.uint32))
+        t_arr[g:], k_arr[g:], p_arr[g:] = t_arr[0], k_arr[0], p_arr[0]
+        draws[g:] = draws[0]
+        self.state, self.tok = _admit_group_fn()(
             self.state, self.tok, jnp.asarray(src), fresh, logits,
-            self._sample_key())
+            jnp.asarray(draws), jnp.asarray(t_arr), jnp.asarray(k_arr),
+            jnp.asarray(p_arr))
         self.counters["admit_dispatches"] += 1
         self.counters["grouped_admissions"] += 1
         self.counters["grouped_requests"] += g
-        for lane, req in zip(lanes, group):
-            self._register_admit(lane, req, bucket=bucket, group_size=g)
+        for lane, req, carry in zip(lanes, group, carries):
+            self._register_admit(lane, req, bucket=bucket, group_size=g,
+                                 lane_key=carry)
+
+    def _set_lane_knobs(self, lane: int, req: Request) -> None:
+        """Load one lane's runtime knob slots from the request (its
+        SamplingParams override, else the loop defaults)."""
+        t, k, p = self._req_sampling(req)
+        self.lane_temp[lane] = t
+        self.lane_topk[lane] = k
+        self.lane_topp[lane] = p
+        sp = req.sampling
+        self.lane_eos[lane] = (self.eos if sp is None or sp.eos is None
+                               else sp.eos)
+        self._lane_prio[lane] = req.priority
+
+    def _reset_lane_knobs(self, lane: int) -> None:
+        """Back to the loop defaults when a lane frees — a stale
+        sampled-lane temperature would otherwise keep the block's
+        all-greedy fast path (`lax.cond` on any(temp > 0)) disabled."""
+        self.lane_temp[lane] = self.temperature
+        self.lane_topk[lane] = self.top_k
+        self.lane_topp[lane] = self.top_p
+        self.lane_eos[lane] = self.eos
+        self._lane_prio[lane] = 0
 
     def _register_admit(self, lane: int, req: Request, bucket: int,
                         prefill_chunks: int = 1, group_size: int = 1,
-                        prefix_tokens: int = 0, prefix_exact: bool = False):
+                        prefix_tokens: int = 0, prefix_exact: bool = False,
+                        lane_key=None):
         """Host-side bookkeeping for a request just spliced into `lane`."""
         self.active[lane] = req.max_new > 0
         self.remaining[lane] = max(req.max_new, 0)
         self.outputs[lane] = []
         self._lane_rid[lane] = req.rid
+        self._set_lane_knobs(lane, req)
+        if lane_key is not None:
+            self._lane_keys[lane] = np.asarray(lane_key, np.uint32)
         st = self.stats[req.rid]
         st.lane = lane
         st.t_admit = self._now()
@@ -1099,6 +1397,160 @@ class ServeLoop:
         if req.max_new <= 0:                   # prefill-only request
             st.t_first = st.t_admit            # ttft == prefill completion
             self._finish_lane(lane, self._now())
+
+    # -- priority preemption + drain-aware reservation -----------------------
+
+    def _admit_resumed(self, lane: int, req: Request) -> None:
+        """Splice a preempted request's captured state back into a free
+        lane — zero prefill work; the stream continues exactly where it
+        stopped (outputs, budget, PRNG carry, and the carried next token
+        all restored)."""
+        self._ensure_state()
+        rs = req.resume
+        req.resume = None
+        self.state, self.tok = _resume_fn()(
+            self.state, self.tok, lane, rs.state,
+            jnp.asarray(rs.tok, jnp.int32))
+        self.counters["admit_dispatches"] += 1
+        self.active[lane] = rs.rem > 0
+        self.remaining[lane] = rs.rem
+        self.outputs[lane] = list(rs.outputs)
+        self._lane_rid[lane] = req.rid
+        self._set_lane_knobs(lane, req)
+        self._lane_keys[lane] = np.asarray(rs.key, np.uint32)
+        st = self.stats[req.rid]
+        st.lane = lane
+        st.admit_seq = self._admit_seq
+        self._admit_seq += 1
+
+    def _preempt_lane(self, lane: int) -> None:
+        """Evict one active lane for a higher class: capture its exact
+        mid-stream snapshot (`_lane_slice_fn` state slice + carried next
+        token + budget + PRNG carry + emitted tokens) onto the request
+        and requeue it at its arrival rank."""
+        rid = self._lane_rid[lane]
+        req = self._req_by_rid[rid]
+        fresh = _lane_slice_fn(_model_key(self.model))(self.state, lane)
+        req.resume = _ResumeState(
+            state=fresh, tok=int(np.asarray(self.tok)[lane]),
+            rem=int(self.remaining[lane]),
+            key=self._lane_keys[lane].copy(),
+            outputs=list(self.outputs[lane]))
+        self.active[lane] = False
+        self.remaining[lane] = 0
+        self.outputs[lane] = []
+        self._lane_rid[lane] = None
+        self._reset_lane_knobs(lane)
+        st = self.stats[rid]
+        st.preemptions += 1
+        st.lane = -1
+        self.counters["preemptions"] += 1
+        self._requeue(req)
+
+    def _requeue(self, req: Request) -> None:
+        """Re-insert a preempted request at its arrival rank: it resumes
+        as soon as its class is schedulable again (its old rank keeps it
+        ahead of later arrivals in the same class)."""
+        req.admitted = False
+        dq = self._bucket_q.setdefault(self._qkey(req), deque())
+        idx = next((i for i, r in enumerate(dq)
+                    if r.arrival > req.arrival), len(dq))
+        dq.insert(idx, req)
+        if req not in self._arrived_fifo:      # identity compare (eq=False)
+            fifo = self._arrived_fifo
+            idx = next((i for i, r in enumerate(fifo)
+                        if r.arrival > req.arrival), len(fifo))
+            fifo.insert(idx, req)
+        self._arrived_count += 1
+
+    def _try_preempt(self) -> bool:
+        """With every lane busy: if the best waiting class strictly
+        outranks the lowest-priority active lane, evict that lane (ties
+        broken toward the most predicted remaining work — evicting it
+        frees capacity for the longest). Returns True when a lane was
+        freed. Equal-priority traffic never preempts, and a lane running
+        a legacy `admit()` batch (no Request to requeue) is exempt."""
+        if not self._bucket_q:
+            return False
+        top = min(self._bucket_q)
+        head = self._bucket_q[top][0]
+        if (head.resume is None and self._needs_chunking(top[1])
+                and self._pending is not None):
+            return False          # couldn't be admitted this round anyway
+        pred = self.predicted_free_blocks()
+        victim: Optional[int] = None
+        vrank: Tuple[int, int] = (0, 0)
+        for lane in np.flatnonzero(self.active):
+            lane = int(lane)
+            if self._pending is not None and lane == self._pending.lane:
+                continue
+            rid = self._lane_rid[lane]
+            if rid is None or rid not in self._req_by_rid:
+                continue
+            rank = (int(self._lane_prio[lane]), -pred.get(lane, 0))
+            if victim is None or rank < vrank:
+                victim, vrank = lane, rank
+        if victim is None or -top[0] <= vrank[0]:
+            return False
+        self._preempt_lane(victim)
+        return True
+
+    def predicted_free_blocks(self) -> Dict[int, int]:
+        """Per-active-lane drain prediction: decode blocks until the
+        lane frees. The expected remaining tokens are the lane's unspent
+        budget, bounded by the observed mean EOS-termination length
+        (minus what the lane already emitted) once EOS terminations
+        dominate the completed traffic — at least 4 observed and no
+        fewer than budget exhaustions — so EOS-heavy traffic predicts
+        earlier than its worst-case budget."""
+        eos_mean = None
+        if (len(self._eos_lens) >= 4
+                and len(self._eos_lens) >= self._budget_done):
+            eos_mean = float(np.mean(self._eos_lens))
+        out: Dict[int, int] = {}
+        for lane in np.flatnonzero(self.active):
+            lane = int(lane)
+            exp = int(self.remaining[lane])
+            if eos_mean is not None:
+                exp = min(exp, max(1, round(eos_mean)
+                                   - len(self.outputs[lane])))
+            out[lane] = max(1, math.ceil(exp / self.block))
+        return out
+
+    def _reserve(self) -> None:
+        """Drain-aware pre-grouping: with every lane busy, predict which
+        lanes free within `reserve_blocks` decode blocks and pop that
+        many queued requests NOW, so their (grouped) admission fires the
+        moment the lanes actually free instead of waiting out another
+        scheduling round. Reserved requests follow the normal target
+        ordering (priority class, then shortest bucket, aging bound
+        included) and are admitted ahead of the queues."""
+        if (not self.reserve_blocks or not self.group_admit
+                or not self._bucket_q):
+            return
+        soon = sum(1 for b in self.predicted_free_blocks().values()
+                   if b <= self.reserve_blocks)
+        room = soon - len(self._reserved)
+        if room <= 0:
+            return
+        fifo_head = self._fifo_head()
+        if fifo_head is None:
+            return
+        target = min(self._bucket_q)
+        if (-target[0] <= fifo_head.priority
+                and target != self._qkey(fifo_head)
+                and self._head_skips >= self.max_head_skips):
+            target = self._qkey(fifo_head)     # aging kicks in
+        if (self._needs_chunking(target[1])
+                and self._bucket_q[target][0].resume is None):
+            return          # sliced prefills reserve their own lane
+        group = self._take_bucket(target, room)
+        if not group:
+            return
+        self._head_skips = (0 if fifo_head in group
+                            else self._head_skips + 1)
+        self._reserved.extend(group)
+        self.counters["reservations"] += len(group)
 
     # -- chunked (time-sliced) admission -------------------------------------
 
@@ -1237,6 +1689,17 @@ class ServeLoop:
         the shortest chunk-free bucket (aging credit untouched) so free
         lanes never idle behind the sliced prefill.
 
+        Priority classes sort ahead of bucket width: the target class is
+        the best (-priority, bucket) tuple present, so higher classes
+        always admit first and equal-priority traffic reduces exactly to
+        the bucket ordering above. With NO free lane, a strictly-higher
+        waiting class may preempt the lowest-priority active lane
+        (`_try_preempt`); otherwise drain-aware reservation pre-pops the
+        requests predicted to fit within `reserve_blocks` decode blocks
+        (`_reserve`) so their grouped prefill fires the moment lanes
+        free. A preempted request resumes via a zero-prefill state
+        splice (`_admit_resumed`), always solo, never chunked.
+
         Each round is O(newly arrived + len(buckets)): requests whose
         arrival passed are drained once into their bucket's FIFO deque,
         the target bucket comes from the deque heads, and the group is
@@ -1245,38 +1708,65 @@ class ServeLoop:
         n = 0
         while True:
             self._drain_arrivals(self._now())
-            if self._arrived_count == 0:
+            if self._arrived_count == 0 and not self._reserved:
                 break
             free = [int(lane) for lane in np.flatnonzero(~self.active)
                     if self._pending is None
                     or int(lane) != self._pending.lane]
             if not free:
+                if self._try_preempt():
+                    continue
+                self._reserve()
                 break
+            if self._reserved:
+                group = self._take_reserved(len(free))
+                self.counters["reserved_admits"] += len(group)
+                n += self._admit_chosen(free, group)
+                continue
             fifo_head = self._fifo_head()      # arrived_count > 0 ⇒ set
             if not self.group_admit:
-                target, take = fifo_head.bucket, 1
+                target, take = self._qkey(fifo_head), 1
             else:
+                best = min(self._bucket_q)     # best class, shortest bucket
                 if self._arrived_count > len(free):
-                    target = min(self._bucket_q)   # shortest present
-                    if (target != fifo_head.bucket
+                    target = best
+                    if (-best[0] <= fifo_head.priority
+                            and target != self._qkey(fifo_head)
                             and self._head_skips >= self.max_head_skips):
-                        target = fifo_head.bucket  # aging kicks in
-                else:                          # off load: FIFO head
-                    target = fifo_head.bucket
+                        target = self._qkey(fifo_head)  # aging kicks in
+                else:                          # off load: FIFO head, unless
+                    target = self._qkey(fifo_head)      # a class outranks it
+                    if -best[0] > fifo_head.priority:
+                        target = best
                 take = len(free)
+            if self._bucket_q[target][0].resume is not None:
+                # preempted request resuming: zero-prefill solo splice
+                req = self._take_bucket(target, 1)[0]
+                self._head_skips = (0 if fifo_head is req
+                                    else self._head_skips + 1)
+                self._admit_resumed(free[0], req)
+                n += 1
+                continue
             if (self.group_admit and self._pending is not None
-                    and self._needs_chunking(target)):
+                    and self._needs_chunking(target[1])):
                 # one sliced prefill at a time — instead of idling the
                 # free lanes behind it, admit the shortest chunk-free
-                # bucket this round; the head's aging credit is NOT
-                # touched on a blocked round, so the max_head_skips
-                # bound keeps holding
-                alts = [b for b in self._bucket_q
-                        if not self._needs_chunking(b)]
+                # bucket this round (resume heads are chunk-free by
+                # construction); the head's aging credit is NOT touched
+                # on a blocked round, so the max_head_skips bound keeps
+                # holding
+                alts = [k for k in self._bucket_q
+                        if not self._needs_chunking(k[1])
+                        or self._bucket_q[k][0].resume is not None]
                 if not alts:
                     break
                 target = min(alts)
-            if self._needs_chunking(target):
+                if self._bucket_q[target][0].resume is not None:
+                    req = self._take_bucket(target, 1)[0]
+                    self._admit_resumed(free[0], req)
+                    n += 1
+                    continue
+            if self._needs_chunking(target[1]):
                 if self._pending is not None:
                     break                      # one sliced prefill at a time
                 # aging accounting: `is`/`in` are identity comparisons
@@ -1292,12 +1782,21 @@ class ServeLoop:
             group = self._take_bucket(target, take)
             self._head_skips = (0 if fifo_head in group
                                 else self._head_skips + 1)
-            if len(group) == 1:
-                self._admit_lane(free[0], group[0])
-            else:
-                self._admit_group(free[:len(group)], group)
-            n += len(group)
+            n += self._admit_chosen(free, group)
         return n
+
+    def _admit_chosen(self, free: List[int], group: List[Request]) -> int:
+        """Dispatch an already-popped admission group into free lanes
+        (resume-aware: a captured-state head splices without prefill)."""
+        if not group:
+            return 0
+        if group[0].resume is not None:
+            self._admit_resumed(free[0], group[0])
+        elif len(group) == 1:
+            self._admit_lane(free[0], group[0])
+        else:
+            self._admit_group(free[:len(group)], group)
+        return len(group)
 
     def admit(self, prompts: np.ndarray):
         """Deprecated legacy all-lanes admission: prompts
@@ -1317,6 +1816,20 @@ class ServeLoop:
         # covers the first generated token on this path too
         self.tok = _next_token(logits, self._sample_key(), self.temperature,
                                self.top_k, self.top_p).astype(jnp.int32)
+        # broadcast the engine-wide scalars through the per-lane runtime
+        # slots so the vectorized block serves the deprecated surface too
+        if self.temperature > 0:
+            self._key, *subs = jax.random.split(self._key, self.lanes + 1)
+            self._lane_keys = np.stack(
+                [np.asarray(s, np.uint32) for s in subs])
+        else:
+            self._lane_keys = np.broadcast_to(
+                np.asarray(self._key, np.uint32), (self.lanes, 2)).copy()
+        self.lane_temp[:] = self.temperature
+        self.lane_topk[:] = self.top_k
+        self.lane_topp[:] = self.top_p
+        self.lane_eos[:] = self.eos
+        self._lane_prio[:] = 0
         self.active[:] = self.max_new > 0
         self.remaining[:] = max(self.max_new, 0)
         self.outputs = [[] for _ in range(self.lanes)]
@@ -1376,15 +1889,21 @@ class ServeLoop:
         window = self._decode_window(steps)
         self._windows.add(window)
         self.counters["decode_windows"] = len(self._windows)
-        fn = _masked_block_fn(_model_key(self.model), steps,
-                              self.temperature, self.top_k, self.top_p,
-                              window)
+        fn = _lanes_block_fn(_model_key(self.model), steps, window)
         was_active = self.active.copy()
-        self.state, self.tok, active, rem, self._key, toks, emitted = fn(
+        self.state, self.tok, active, rem, keys, toks, emitted = fn(
             self.params, self.state, self.tok,
             jnp.asarray(self.active), jnp.asarray(self.remaining),
-            jnp.asarray(self.eos, jnp.int32), self._key)
+            jnp.asarray(self.lane_eos, jnp.int32),
+            jnp.asarray(self._lane_keys, jnp.uint32),
+            jnp.asarray(self.lane_temp, jnp.float32),
+            jnp.asarray(self.lane_topk, jnp.int32),
+            jnp.asarray(self.lane_topp, jnp.float32))
+        self._lane_keys = np.asarray(keys).astype(np.uint32)
         self.counters["decode_blocks"] += 1
+        # knob values ride in as [lanes] arrays, so the jit cache holds ONE
+        # program per (steps, window) regardless of the knob mix on board
+        self.counters["decode_block_programs"] = fn._cache_size()
         host_toks = np.asarray(toks)                       # [steps, lanes]
         host_emit = np.asarray(emitted)                    # [steps, lanes]
         self.active = np.asarray(active).copy()
@@ -1419,6 +1938,13 @@ class ServeLoop:
         self.done.append(st.tokens)
         self._finished.add(rid)
         self._lane_rid[lane] = None
+        self._req_by_rid.pop(rid, None)
+        self._reset_lane_knobs(lane)
+        if st.max_new > 0:                     # drain-prediction statistics
+            if self.remaining[lane] > 0:
+                self._eos_lens.append(len(st.tokens))
+            else:
+                self._budget_done += 1
 
     def _lane_occupancy(self, lane: int) -> float:
         kv = self.state.kv if self.state is not None else None
@@ -1436,8 +1962,8 @@ class ServeLoop:
         prefills."""
         if self._t0 is None:
             self._t0 = time.monotonic()
-        while (self._arrived_count or self._arrivals or self.active.any()
-               or self._pending is not None):
+        while (self._arrived_count or self._arrivals or self._reserved
+               or self.active.any() or self._pending is not None):
             self.schedule()
             stepped = self._advance_chunked()
             if self.active.any():

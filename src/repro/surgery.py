@@ -16,6 +16,12 @@ Naming convention — the prefix says what a helper operates on:
   state_lanes_insert(state, src, fresh)    multi-lane scatter splice
   state_lane_select(active, new, old)      per-lane merge (termination)
 
+The slice/insert pair is also the scheduler's preemption machinery: a
+priority eviction captures the victim lane with `state_lane_slice`
+(jit-compiled, traced lane index) and the later resume splices the
+snapshot back with `state_lane_insert` — mid-stream, token-identically
+(`launch/serve.py::ServeLoop._preempt_lane` / `_admit_resumed`).
+
 ``kv_*`` — bare `KVCache` instances (batch_axis selects layout):
   kv_lane_slice / kv_lane_insert / kv_lanes_insert / kv_lane_reset
 

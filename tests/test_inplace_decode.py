@@ -243,7 +243,7 @@ def test_masked_block_inplace_parity():
 # -- the in-place guarantee: aliasing + flat temp bytes -----------------------
 
 
-def _compiled_block(slots, steps=4, donate=False, masked=True):
+def _compiled_block(slots, steps=4, donate=False, masked=True, lanes=False):
     cfg = reduced(get_config("longchat-7b"))
     prune = baselines.unicaim(heavy=48, reserve=16, select_k=16,
                               sink_tokens=2, recent_window=8)
@@ -252,7 +252,17 @@ def _compiled_block(slots, steps=4, donate=False, masked=True):
     state = model.init_decode_state(B)
     tok = jnp.zeros((B,), jnp.int32)
     w = decode_window(48, steps, slots, prune)
-    if masked:
+    if lanes:
+        fn = lambda p, st, tk, a, r, e, k, t, tk_, tp: \
+            serve.decode_block_lanes(model, p, st, tk, a, r, e, k, t, tk_,
+                                     tp, steps=steps, window=w)
+        args = (params, state, tok, jnp.ones((B,), bool),
+                jnp.full((B,), 8, jnp.int32), jnp.full((B,), -1, jnp.int32),
+                jnp.broadcast_to(jax.random.PRNGKey(0), (B, 2)),
+                jnp.zeros((B,), jnp.float32), jnp.zeros((B,), jnp.int32),
+                jnp.zeros((B,), jnp.float32))
+        donate_argnums = (1, 2, 3, 4, 6) if donate else ()
+    elif masked:
         fn = lambda p, st, tk, a, r, e, k: serve.decode_block_masked(
             model, p, st, tk, a, r, e, k, steps=steps, window=w)
         args = (params, state, tok, jnp.ones((B,), bool),
@@ -296,3 +306,31 @@ def test_masked_block_temp_bytes_flat_in_slots():
     assert temps[4096] <= temps[512] * 1.10 + (64 << 10), (
         f"temp bytes scale with slots: {temps} — the decode block is "
         f"copying the cache carry again")
+
+
+def test_lanes_block_donation_surfaces_as_aliasing():
+    """The per-lane-knob block (`decode_block_lanes`, what ServeLoop
+    actually dispatches) must keep every DecodeState buffer aliased
+    input→output under donation — threading [lanes]-shaped knob/key
+    arrays through the scan carry must not break the zero-copy path."""
+    lowered, n_state_leaves = _compiled_block(512, donate=True, lanes=True)
+    text = lowered.as_text()
+    aliased = len(re.findall(r"tf\.aliasing_output", text))
+    # state leaves + tok + active/rem/keys
+    assert aliased >= n_state_leaves + 1, (
+        f"only {aliased} aliased args for {n_state_leaves} state leaves")
+
+
+def test_lanes_block_temp_bytes_flat_in_slots():
+    """Same flat-temp guarantee for the per-lane-knob block: the
+    vectorized sampler works over [lanes, vocab] logits — independent of
+    the slot count — so temp bytes must stay flat in `slots` exactly
+    like the scalar block."""
+    temps = {}
+    for slots in (512, 4096):
+        lowered, _ = _compiled_block(slots, lanes=True)
+        ma = lowered.compile().memory_analysis()
+        temps[slots] = ma.temp_size_in_bytes
+    assert temps[4096] <= temps[512] * 1.10 + (64 << 10), (
+        f"temp bytes scale with slots: {temps} — the lanes decode block "
+        f"is copying the cache carry again")

@@ -1,0 +1,229 @@
+"""Per-lane serving knobs, priority preemption, and drain-aware
+reservation.
+
+Covers the PR-8 scheduler/block refactor end to end: mixed per-request
+`SamplingParams` decoded in ONE scanned block (greedy lanes bitwise vs a
+solo run, seeded-sampled lanes stream-identical), preempt/resume
+token-identity for greedy AND pinned-seed requests, priority-class
+admission ordering, the reservation fast path (bitwise-neutral, counted),
+per-request stop tokens, and the one-compiled-program guarantee across
+arbitrary knob mixes (`counters["decode_block_programs"]`).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.core import baselines
+from repro.launch.serve import Request, SamplingParams, ServeLoop
+from repro.models.transformer import Model
+
+jax.config.update("jax_platform_name", "cpu")
+
+PRUNE = baselines.unicaim(heavy=48, reserve=16, select_k=16,
+                          sink_tokens=2, recent_window=8)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("granite-3-2b"))
+    model = Model(cfg, PRUNE)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompt(cfg, t, seed=0):
+    return np.random.default_rng(seed).integers(0, cfg.vocab_size, t)
+
+
+def _solo(model, params, req_kw, **loop_kw):
+    """Reference: the same request served alone on a fresh engine."""
+    loop = ServeLoop(model, params, lanes=1, block=4, **loop_kw)
+    h = loop.submit(Request(**req_kw))
+    loop.run()
+    return h.tokens
+
+
+# -- mixed per-lane knobs in one block ---------------------------------------
+
+
+def test_mixed_knob_block_matches_solo(setup):
+    """Greedy, seeded-sampled, and top-k/top-p lanes decoding TOGETHER in
+    one scanned block each reproduce their solo-engine stream exactly —
+    the greedy lane bitwise, the seeded lanes because a lane's sampled
+    stream is a function of (seed, tokens generated) alone. And the whole
+    mix runs on ONE compiled block program."""
+    cfg, model, params = setup
+    reqs = [
+        dict(prompt=_prompt(cfg, 16, 1), max_new=8),                  # greedy
+        dict(prompt=_prompt(cfg, 20, 2), max_new=8,
+             sampling=SamplingParams(temperature=0.9, top_k=5),
+             sample_seed=7),
+        dict(prompt=_prompt(cfg, 24, 3), max_new=6,
+             sampling=SamplingParams(temperature=1.0, top_p=0.8),
+             sample_seed=11),
+    ]
+    loop = ServeLoop(model, params, lanes=3, eos=-1, block=4)
+    hs = [loop.submit(Request(**kw)) for kw in reqs]
+    loop.run()
+    assert loop.counters["decode_block_programs"] == 1
+    for h, kw in zip(hs, reqs):
+        assert h.tokens == _solo(model, params, kw, eos=-1)
+        assert len(h.tokens) == kw["max_new"]
+
+
+def test_all_greedy_engine_keys_untouched(setup):
+    """An all-greedy engine must not consume RNG: the per-lane key
+    carries pass through the block bitwise-unchanged (the sampled branch
+    is gated out by `lax.cond`), so greedy serving stays deterministic
+    and bitwise-reproducible run to run."""
+    cfg, model, params = setup
+
+    def serve():
+        loop = ServeLoop(model, params, lanes=2, eos=-1, block=4)
+        hs = [loop.submit(Request(prompt=_prompt(cfg, 16, s), max_new=8))
+              for s in (1, 2)]
+        keys0 = loop._lane_keys.copy()
+        loop.run()
+        np.testing.assert_array_equal(loop._lane_keys, keys0)
+        return [h.tokens for h in hs]
+
+    assert serve() == serve()
+
+
+def test_perlane_eos_via_sampling_params(setup):
+    """`SamplingParams(eos=...)` stops ONE lane on its own token id while
+    its neighbor (engine default eos=-1) runs out its full budget."""
+    cfg, model, params = setup
+    probe = ServeLoop(model, params, lanes=1, eos=-1, block=4)
+    hp = probe.submit(Request(prompt=_prompt(cfg, 16, 1), max_new=8))
+    probe.run()
+    stop = hp.tokens[3]                        # a token the stream emits
+    loop = ServeLoop(model, params, lanes=2, eos=-1, block=4)
+    h_stop = loop.submit(Request(prompt=_prompt(cfg, 16, 1), max_new=8,
+                                 sampling=SamplingParams(eos=stop)))
+    h_full = loop.submit(Request(prompt=_prompt(cfg, 16, 2), max_new=8))
+    loop.run()
+    assert h_stop.tokens == hp.tokens[:3]      # eos is a stop, not an output
+    assert len(h_full.tokens) == 8             # neighbor lane unaffected
+
+
+# -- priority classes + preemption -------------------------------------------
+
+
+def test_priority_admits_first(setup):
+    """With one lane and two waiting classes, the higher class admits
+    first even though the low-priority request arrived earlier."""
+    cfg, model, params = setup
+    loop = ServeLoop(model, params, lanes=1, eos=-1, block=4)
+    h_lo = loop.submit(Request(prompt=_prompt(cfg, 16, 1), max_new=4,
+                               arrival=0.0, priority=0))
+    h_hi = loop.submit(Request(prompt=_prompt(cfg, 16, 2), max_new=4,
+                               arrival=0.0, priority=3))
+    loop.run()
+    assert h_hi.stats.admit_seq < h_lo.stats.admit_seq
+    assert loop.counters["preemptions"] == 0   # a free lane never preempts
+
+
+def _preempt_run(model, params, victim_kw, cfg):
+    """Serve victim + filler on 2 lanes, inject a priority-5 arrival
+    mid-decode, and return (victim tokens, loop)."""
+    loop = ServeLoop(model, params, lanes=2, eos=-1, block=4)
+    h_v = loop.submit(Request(**victim_kw))
+    loop.submit(Request(prompt=_prompt(cfg, 16, 90), max_new=12,
+                        priority=1))
+    loop.schedule()                            # both admitted, lanes full
+    loop._step_block()                         # one block into decode
+    loop.submit(Request(prompt=_prompt(cfg, 16, 91), max_new=4, priority=5))
+    loop.run()
+    return h_v, loop
+
+
+def test_preempt_resume_greedy_token_identical(setup):
+    """A high-priority arrival with no free lane evicts the LOWEST
+    priority active lane; the victim requeues and resumes with exactly
+    the tokens an uninterrupted run produces."""
+    cfg, model, params = setup
+    victim = dict(prompt=_prompt(cfg, 16, 1), max_new=12, priority=0)
+    h_v, loop = _preempt_run(model, params, victim, cfg)
+    assert loop.counters["preemptions"] == 1
+    assert h_v.stats.preemptions == 1          # priority 0 < filler's 1
+    assert h_v.tokens == _solo(model, params, victim, eos=-1)
+    assert len(h_v.tokens) == 12
+
+
+def test_preempt_resume_seeded_sampled_token_identical(setup):
+    """The per-lane PRNG carry is captured and restored across the
+    preempt/resume boundary, so even a SAMPLED (pinned-seed) victim
+    resumes stream-identically — the key splits once per generated
+    token, wherever and whenever those tokens run."""
+    cfg, model, params = setup
+    victim = dict(prompt=_prompt(cfg, 16, 1), max_new=12, priority=0,
+                  sampling=SamplingParams(temperature=0.9, top_k=8),
+                  sample_seed=13)
+    h_v, loop = _preempt_run(model, params, victim, cfg)
+    assert loop.counters["preemptions"] == 1
+    assert h_v.stats.preemptions == 1
+    assert h_v.tokens == _solo(model, params, victim, eos=-1)
+
+
+def test_equal_priority_never_preempts(setup):
+    """Same-class congestion waits for a lane like PR-4 did — preemption
+    requires a STRICTLY higher class."""
+    cfg, model, params = setup
+    loop = ServeLoop(model, params, lanes=2, eos=-1, block=4)
+    for s in range(2):
+        loop.submit(Request(prompt=_prompt(cfg, 16, s), max_new=8,
+                            priority=2))
+    loop.schedule()
+    loop._step_block()
+    loop.submit(Request(prompt=_prompt(cfg, 16, 9), max_new=4, priority=2))
+    loop.run()
+    assert loop.counters["preemptions"] == 0
+    assert len(loop.completed) == 3
+
+
+# -- drain-aware reservation --------------------------------------------------
+
+
+def test_reservation_counts_and_is_bitwise_neutral(setup):
+    """With every lane busy the scheduler pre-pops soon-to-fit requests
+    (reservations > 0, each later admitted as reserved_admits); the
+    resulting greedy token streams are identical to a reservation-free
+    engine — it is purely an admission-latency optimization."""
+    cfg, model, params = setup
+
+    def serve(reserve_blocks):
+        loop = ServeLoop(model, params, lanes=2, eos=-1, block=4,
+                         reserve_blocks=reserve_blocks)
+        hs = [loop.submit(Request(prompt=_prompt(cfg, 16, s), max_new=8))
+              for s in range(2)]
+        loop.schedule()                        # saturate both lanes
+        hs += [loop.submit(Request(prompt=_prompt(cfg, 16, 10 + s),
+                                   max_new=8)) for s in range(3)]
+        loop.run()
+        return [h.tokens for h in hs], loop
+
+    toks_res, loop_res = serve(reserve_blocks=8)
+    toks_off, loop_off = serve(reserve_blocks=0)
+    assert toks_res == toks_off
+    assert loop_res.counters["reservations"] > 0
+    assert (loop_res.counters["reserved_admits"]
+            == loop_res.counters["reservations"])
+    assert loop_off.counters["reservations"] == 0
+    assert loop_off.counters["reserved_admits"] == 0
+
+
+def test_predicted_free_blocks_uses_eos_stats(setup):
+    """Once EOS terminations dominate completed traffic, the drain
+    prediction bounds a lane's remaining work by the observed mean EOS
+    length instead of its worst-case budget."""
+    cfg, model, params = setup
+    loop = ServeLoop(model, params, lanes=1, eos=-1, block=4)
+    loop.submit(Request(prompt=_prompt(cfg, 16, 1), max_new=100))
+    loop.schedule()
+    assert loop.predicted_free_blocks() == {0: 25}   # 100 rem / block 4
+    loop._eos_lens = [4, 4, 4, 4]              # observed EOS lengths
+    assert loop.predicted_free_blocks() == {0: 1}    # bounded by the mean
+    loop._budget_done = 5                      # budget exhaustion dominates
+    assert loop.predicted_free_blocks() == {0: 25}

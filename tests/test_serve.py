@@ -616,11 +616,13 @@ def test_chunked_prefill_ragged_bucket_uses_rounded_workspace(setup):
 
 
 def test_runtime_eos_block_parity_and_shared_program(setup):
-    """The masked decode block is keyed on `steps` only: a RUNTIME eos
-    must reproduce the statically-baked-eos program bit for bit, and two
-    engines with different eos ids must share ONE compiled block."""
+    """The lanes decode block is keyed on (steps, window) only: runtime
+    per-lane eos must reproduce the statically-baked-eos scalar oracle
+    bit for bit, engines with different eos ids must share ONE compiled
+    block, and swapping the per-lane knob mix (greedy next to sampled
+    lanes) must hit the SAME program — zero recompiles."""
     import functools
-    from repro.launch.serve import (_masked_block_fn, _model_key,
+    from repro.launch.serve import (_lanes_block_fn, _model_key,
                                     decode_block_masked)
     cfg, model, params = setup
     prompts = np.stack([_prompt(cfg, 24, seed=s) for s in range(2)])
@@ -630,38 +632,48 @@ def test_runtime_eos_block_parity_and_shared_program(setup):
     active = jnp.ones(2, bool)
     rem = jnp.full(2, 8, jnp.int32)
     key = jax.random.PRNGKey(0)
+    keys = jnp.broadcast_to(key, (2, 2))
+    g_t = jnp.zeros(2, jnp.float32)            # all-greedy knob arrays
+    g_k = jnp.zeros(2, jnp.int32)
+    g_p = jnp.zeros(2, jnp.float32)
 
     def snap():
         # the block fn donates its carry on non-CPU backends — hand each
         # call its own copy so the test stays portable
         return (jax.tree.map(jnp.copy, state0), jnp.copy(tok0),
-                jnp.copy(active), jnp.copy(rem), jnp.copy(key))
+                jnp.copy(active), jnp.copy(rem), jnp.copy(keys))
 
     # greedy reference to learn a token id that actually appears
-    fn = _masked_block_fn(_model_key(model), 8)
+    fn = _lanes_block_fn(_model_key(model), 8)
     st, tk, ac, rm, ky = snap()
     *_, toks_ref, emit_ref = fn(params, st, tk, ac, rm,
-                                jnp.asarray(-1, jnp.int32), ky)
+                                jnp.full(2, -1, jnp.int32), ky,
+                                g_t, g_k, g_p)
     eos = int(np.asarray(toks_ref)[3, 0])
-    # statically-baked eos oracle (the pre-refactor formulation)
+    # statically-baked-eos scalar oracle (the pre-refactor block)
     static = jax.jit(functools.partial(decode_block_masked, model,
                                        eos=eos, steps=8))
     st, tk, ac, rm, ky = snap()
-    *_, toks_s, emit_s = static(params, st, tk, ac, rm, key=ky)
+    *_, toks_s, emit_s = static(params, st, tk, ac, rm, key=jnp.copy(key))
     st, tk, ac, rm, ky = snap()
     *_, toks_r, emit_r = fn(params, st, tk, ac, rm,
-                            jnp.asarray(eos, jnp.int32), ky)
+                            jnp.full(2, eos, jnp.int32), ky, g_t, g_k, g_p)
     np.testing.assert_array_equal(np.asarray(toks_r), np.asarray(toks_s))
     np.testing.assert_array_equal(np.asarray(emit_r), np.asarray(emit_s))
-    # every (steps, eos) combination maps onto the same compiled program
-    assert _masked_block_fn(_model_key(model), 8) is fn
-    loop_a = ServeLoop(model, params, lanes=2, eos=5, block=8)
+    # every (eos, knob-mix) combination maps onto the same compiled program
+    assert _lanes_block_fn(_model_key(model), 8) is fn
+    before = fn._cache_size()
+    st, tk, ac, rm, ky = snap()
+    fn(params, st, tk, ac, rm, jnp.asarray([5, 7], jnp.int32), ky,
+       jnp.asarray([0.0, 0.9], jnp.float32), jnp.asarray([0, 5], jnp.int32),
+       jnp.asarray([0.0, 0.8], jnp.float32))
+    assert fn._cache_size() == before          # knob mix: zero recompiles
+    loop_a = ServeLoop(model, params, lanes=2, eos=5, block=8,
+                       temperature=0.7, top_k=3)
     loop_b = ServeLoop(model, params, lanes=2, eos=7, block=8)
-    fa = _masked_block_fn(_model_key(loop_a.model), 8, loop_a.temperature,
-                          loop_a.top_k)
-    fb = _masked_block_fn(_model_key(loop_b.model), 8, loop_b.temperature,
-                          loop_b.top_k)
-    assert fa is fb
+    fa = _lanes_block_fn(_model_key(loop_a.model), 8)
+    fb = _lanes_block_fn(_model_key(loop_b.model), 8)
+    assert fa is fb and fa is fn
 
 
 def test_scanned_sampling_temperature_topk(setup):
