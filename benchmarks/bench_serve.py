@@ -141,6 +141,30 @@ def _slo_row(stats, slo_s):
             "attainment": float((ttfts <= slo_s).mean())}
 
 
+def _sharded_trace(vocab, n, seed=11):
+    """Saturation-scale arrival trace: staggered variable-length prompts,
+    mixed budgets, a 1-in-7 high-priority burst class riding on bulk."""
+    rng = np.random.default_rng(seed)
+    lens = (9, 17, 24, 31, 40, 47, 63, 64)
+    return [dict(prompt=rng.integers(0, vocab, int(lens[i % len(lens)])),
+                 max_new=int(3 + i % 10),
+                 priority=5 if i % 7 == 0 else 0)
+            for i in range(n)]
+
+
+def _run_trace(model, params, trace, lanes, mesh, rate=None):
+    """Replay one arrival trace; returns (streams, agg, loop, wall)."""
+    loop = ServeLoop(model, params, lanes=lanes, eos=-1, block=BLOCK,
+                     mesh=mesh)
+    hs = [loop.submit(Request(arrival=0.0 if rate is None else i / rate,
+                              **kw))
+          for i, kw in enumerate(trace)]
+    t0 = time.perf_counter()
+    loop.run()
+    return ([h.tokens for h in hs], loop.aggregate(), loop,
+            time.perf_counter() - t0)
+
+
 def _shared_prefix_set(vocab, n, shared=112, suffix=16, budget=6, seed=5):
     """One shared system prompt + distinct per-request suffixes: the
     production shape prefix caching targets. 128-token prompts with
@@ -368,6 +392,77 @@ def run():
                 emit(f"serve_load_{tag}_r{rate:g}", 0.0,
                      f"tok_s={agg['tokens_per_s']:.1f};"
                      f"mean_latency_s={agg['mean_latency_s']:.3f}")
+
+    # -- data-sharded lane-parallel serving (mesh over the data axis) ---------
+    # CI forces devices on CPU (XLA_FLAGS=--xla_force_host_platform_
+    # device_count=8); on one device the section is skipped. Lanes scale
+    # with the device count, so the per-dispatch decode throughput — the
+    # device-count-invariant measure of what sharding buys when wall
+    # clock can't scale on forced host devices — must scale with it.
+    ndev = len(jax.devices())
+    if ndev >= 2:
+        from repro.launch.mesh import make_serve_mesh
+        tag = "unicaim"
+        model = Model(cfg, uni)
+        mesh = make_serve_mesh()
+        sh_lanes = lanes * ndev
+        n_s = 64 if common.SMOKE else 2048
+        trace = _sharded_trace(cfg.vocab_size, n_s)
+        warm = trace[:min(len(trace), 4 * sh_lanes)]
+        for ln, ms in ((sh_lanes, mesh), (sh_lanes, None), (lanes, None)):
+            _run_trace(model, params, warm, ln, ms)
+
+        toks_m, agg_m, loop_m, dt_m = _run_trace(model, params, trace,
+                                                 sh_lanes, mesh)
+        # token-identity replay: same trace, same lanes, no mesh — layout
+        # must never change arithmetic (greedy bitwise, sampled per seed)
+        toks_1, _, _, _ = _run_trace(model, params, trace, sh_lanes, None)
+        identical = float(toks_m == toks_1)
+        # 1-device reference at the unscaled lane count: the scaling row
+        # compares tokens landed per decode-block dispatch at saturation
+        _, agg_b, loop_b, dt_b = _run_trace(model, params, trace, lanes,
+                                            None)
+        tpd_m = agg_m["tokens_per_dispatch"]
+        tpd_b = agg_b["tokens"] / max(loop_b.counters["decode_blocks"], 1)
+        scaling = tpd_m / tpd_b
+        by_class = {}
+        for s in loop_m.completed:
+            by_class.setdefault(s.priority, []).append(s)
+        hi_p99 = float(np.percentile([s.ttft for s in by_class[5]], 99))
+        bulk_p99 = float(np.percentile([s.ttft for s in by_class[0]], 99))
+
+        emit(f"serve_sharded_{ndev}dev_{tag}", dt_m * 1e6,
+             f"tok_s={agg_m['tokens'] / dt_m:.1f};"
+             f"tokens_per_dispatch={tpd_m:.1f};"
+             f"scaling_vs_1dev={scaling:.2f}x;"
+             f"identical={identical:.0f}")
+        emit(f"serve_sharded_pershard_{tag}", 0.0,
+             ";".join(f"shard{i}_tok_s={agg_m[f'shard{i}_tok_s']:.1f}"
+                      for i in range(ndev)))
+        emit(f"serve_sharded_slo_{tag}", 0.0,
+             f"hi_p99_ttft_s={hi_p99:.4f};bulk_p99_ttft_s={bulk_p99:.4f};"
+             f"requests={float(n_s):.0f}")
+        if not common.SMOKE:
+            # offered-load sweep to saturation (arrival-staggered)
+            for rate in (50.0, 200.0):
+                _, agg_l, _, dt_l = _run_trace(model, params, trace,
+                                               sh_lanes, mesh, rate=rate)
+                emit(f"serve_sharded_load_{tag}_r{rate:g}", dt_l * 1e6,
+                     f"tok_s={agg_l['tokens'] / dt_l:.1f}")
+        summary.update({
+            "shards": float(ndev),
+            "sharded_lanes": float(sh_lanes),
+            "sharded_requests": float(n_s),
+            "sharded_agg_tok_s": agg_m["tokens"] / dt_m,
+            "sharded_tokens_per_dispatch": tpd_m,
+            "base_tokens_per_dispatch": tpd_b,
+            "sharded_scaling_speedup": scaling,
+            "sharded_replay_identical": identical,
+            "sharded_hi_p99_ttft_s": hi_p99,
+            "sharded_bulk_p99_ttft_s": bulk_p99,
+            **{f"shard{i}_tok_s": agg_m[f"shard{i}_tok_s"]
+               for i in range(ndev)},
+        })
     return summary
 
 

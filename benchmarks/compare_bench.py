@@ -28,6 +28,11 @@ the same priority traffic means the scheduler evicts lanes it should
 not) and ``*block_programs*`` (more than one compiled decode block per
 (steps, window) means the per-lane knob arrays started recompiling)
 fail under ``--fail-on-counts`` exactly like dispatch/compile counts.
+Sharded-serving rows are count-class too (``*shard*`` lane/shard/request
+counts and tokens-per-dispatch are deterministic on the fixed saturation
+trace) except the wall-clock TTFT rows, which stay informational, and
+the ``*identical*`` replay flag, which is share-class so a drop below
+the committed 1.0 warns (the tier-1 sharded suite hard-fails it).
 ``*_p50`` keys are sibling medians of the min-based ``*_us`` rows
 (see ``common.Timing``): they are never compared against the baseline,
 but when a fresh run's p50/min ratio exceeds ``NOISE_RATIO`` the run is
@@ -60,7 +65,8 @@ def classify(key: str) -> str:
         return "throughput"
     # prefix-cache reuse keys are HIGHER-better; they must outrank the
     # generic lower-better count rule (e.g. "copies" are not dispatches)
-    if "hit_rate" in key or "dedup" in key or "attain" in key:
+    if "hit_rate" in key or "dedup" in key or "attain" in key \
+            or "identical" in key:
         return "share"
     if "copies" in key or "tokens_reused" in key or key.endswith("_hits") \
             or "reserv" in key:
@@ -70,6 +76,12 @@ def classify(key: str) -> str:
         return "count"
     if "speedup" in key or "reduction" in key:
         return "ratio"
+    # sharded-serving rows: lane/shard/request counts, replay-identity
+    # flags, and tokens-per-dispatch are deterministic on the fixed
+    # saturation trace, so they count-gate like dispatch counters.
+    # TTFT rows are wall-clock seconds and stay informational.
+    if "shard" in key and "ttft" not in key:
+        return "count"
     if "_us" in key:
         return "latency"
     return "info"

@@ -347,7 +347,15 @@ def cache_prefix_rows(kv: KVCache, length: int
     bit unconditionally; the f32 `acc` sums match bit-for-bit when the
     donor prefill's query-chunk grid equals the resume chunk size (the
     engine pins `chunk_prefill == cfg.attn_chunk` for that; any other
-    pairing agrees to float-association noise)."""
+    pairing agrees to float-association noise).
+
+    Donors are prefills AND preempted lanes: a victim captured before any
+    decode step advanced it still satisfies the slot-alignment gate
+    (fill == step == prompt length, identity positions), so the serving
+    engine feeds its rows to the prefix trie on eviction
+    (`ServeLoop._cache_insert_preempted`). The gate runs on the cheap
+    host-side light fields first, so decode-advanced captures are
+    refused before any k/v/acc device→host copy."""
     if not prefix_slot_aligned(kv, length):
         return None
     k = np.asarray(kv.k)[:, 0, :, :length]

@@ -22,6 +22,18 @@ def make_host_mesh():
     return jax.make_mesh((1, n), ("data", "model"))
 
 
+def make_serve_mesh(n_shards: int | None = None):
+    """1-D lane-parallel serving mesh: the first `n_shards` devices on a
+    single ``data`` axis. `ServeLoop(mesh=...)` shards its lane batch
+    over it — decode lanes are independent, so the decode block lowers
+    to a collective-free per-shard program (`tests/test_sharded_serve`).
+    On CPU, force devices first: XLA_FLAGS=--xla_force_host_platform_device_count=8.
+    """
+    devs = jax.devices()
+    n = n_shards or len(devs)
+    return jax.make_mesh((n,), ("data",), devices=devs[:n])
+
+
 def make_elastic_mesh(n_devices: int | None = None):
     """Rebuild a (data, model) mesh for the CURRENT device count — the
     elastic-scaling entry point after a topology change."""

@@ -350,6 +350,47 @@ def decode_block_lanes(model: Model, params, state, tok, active, rem,
     return state, tok, active, rem, keys, toks, emitted
 
 
+def decode_block_lanes_sharded(model: Model, mesh, params, state, tok,
+                               active, rem, eos, keys, temperature,
+                               top_k, top_p, steps: int,
+                               window: Optional[int] = None):
+    """`decode_block_lanes` over a lane batch sharded ``P("data")``.
+
+    Lanes are independent — attention, sampling, and EOS/budget masking
+    never read across the batch axis — so the block is a pure data-
+    parallel map over shards. Wrapping the body in `shard_map` (rather
+    than relying on SPMD propagation) pins that down: every shard runs
+    the per-shard program on its own contiguous block of lanes, the
+    all-greedy `lax.cond` fast path (`jnp.any(temperature > 0)`) stays
+    a SHARD-LOCAL reduction instead of lowering to an all-reduce on a
+    knob operand, and the compiled module carries ZERO collectives on
+    cache/knob operands (asserted from the HLO in
+    `tests/test_sharded_serve.py`, like the PR-7 aliasing guard).
+
+    Per-shard per-lane math is bitwise batch-size-independent (the same
+    invariant grouped admission relies on), so the sharded engine
+    streams token-identically to the unsharded one.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.runtime.compat import shard_map
+    from repro.runtime.sharding import lane_pspecs
+
+    state_specs = lane_pspecs(state, mesh)
+    lane = P("data")
+    body = functools.partial(decode_block_lanes, model, steps=steps,
+                             window=window)
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), state_specs, lane, lane, lane, lane,
+                  P("data", None), lane, lane, lane),
+        out_specs=(state_specs, lane, lane, lane, P("data", None),
+                   P(None, "data"), P(None, "data")),
+        check_vma=False)
+    return fn(params, state, tok, active, rem, eos, keys, temperature,
+              top_k, top_p)
+
+
 def donation_mode() -> str:
     """Whether jit buffer donation is honoured on this backend: ``"on"``,
     or ``"cpu-noop"`` where `_donate_argnums` silently disables it (the
@@ -407,16 +448,24 @@ def _masked_block_fn(key, steps: int, temperature: float = 0.0,
 
 
 @functools.lru_cache(maxsize=64)
-def _lanes_block_fn(key, steps: int, window: Optional[int] = None):
-    # the engine's decode block — keyed on (steps, window) ONLY. eos,
-    # the per-lane PRNG carries, and every sampling knob are runtime
+def _lanes_block_fn(key, steps: int, window: Optional[int] = None,
+                    mesh=None):
+    # the engine's decode block — keyed on (steps, window[, mesh]) ONLY.
+    # eos, the per-lane PRNG carries, and every sampling knob are runtime
     # [lanes]-shaped arguments, so one compiled program serves arbitrary
     # per-lane knob mixes (the windows axis still adds at most
     # log2(slots) programs per steps value). The scan carries (state,
     # tok, active, rem, keys) are donated wherever donation is honoured.
+    # With a mesh the body runs under `shard_map` over the "data" axis —
+    # same runtime-knob contract, one collective-free program per shard
+    # (jax.sharding.Mesh is hashable, so it keys the same lru cache).
     model = _rebuild(*key)
-    fn = functools.partial(decode_block_lanes, model, steps=steps,
-                           window=window)
+    if mesh is None:
+        fn = functools.partial(decode_block_lanes, model, steps=steps,
+                               window=window)
+    else:
+        fn = functools.partial(decode_block_lanes_sharded, model, mesh,
+                               steps=steps, window=window)
     return jax.jit(fn, donate_argnums=_donate_argnums(1, 2, 3, 4, 6))
 
 
@@ -859,10 +908,33 @@ class ServeLoop:
                  top_p: float = 0.0, sample_seed: int = 0,
                  window: Union[str, None] = "auto",
                  window_grid: Union[str, int] = "pow2",
-                 prefix_cache_bytes: int = 0):
+                 prefix_cache_bytes: int = 0,
+                 mesh=None):
         self.model = model
         self.params = params
         self.lanes = lanes
+        # Data-sharded lane parallelism: `mesh` is a 1-D jax Mesh over a
+        # "data" axis (or an int shard count — `launch.mesh.make_serve_mesh`
+        # builds the mesh). The lane batch, per-lane knob arrays, and the
+        # stacked DecodeState shard P("data") on the lane axis; decode
+        # dispatches ONE collective-free per-shard program
+        # (`decode_block_lanes_sharded`) and admission works one shard's
+        # lane rows at a time so splice scatters stay shard-local.
+        if isinstance(mesh, int):
+            from repro.launch.mesh import make_serve_mesh
+            mesh = make_serve_mesh(mesh)
+        self.mesh = mesh
+        self.shards = 1
+        if mesh is not None:
+            assert "data" in mesh.shape, f"serve mesh needs a data axis: {mesh}"
+            assert mesh.size == mesh.shape["data"], (
+                f"serve mesh must be 1-D over data: {mesh}")
+            self.shards = int(mesh.shape["data"])
+            assert lanes % self.shards == 0, (
+                f"lanes={lanes} not divisible by {self.shards} shards")
+        self.lanes_per_shard = lanes // self.shards
+        self._shard_tokens = np.zeros(self.shards, np.int64)
+        self._state_shardings = None          # built lazily with the state
         self.max_new = max_new
         self.eos = eos
         self.prompt_len = prompt_len          # legacy hint; not enforced
@@ -972,7 +1044,13 @@ class ServeLoop:
             "prefix_exact_hits": 0, "prefix_copies": 0,
             "prefix_tokens_reused": 0,
             "prefix_inserts": 0, "prefix_evictions": 0,
+            "preempt_cache_inserts": 0,
         }
+        # per-(priority, bucket) EOS-length samples — drain prediction
+        # uses a class-local mean once a class has >= 4 EOS completions,
+        # so short bursty and long bulk traffic stop polluting each
+        # other's free-lane forecasts (global mean is the fallback)
+        self._eos_by_class: Dict[Tuple[int, int], List[int]] = {}
 
     # -- time ----------------------------------------------------------------
 
@@ -1126,6 +1204,28 @@ class ServeLoop:
         if self.state is None:
             self.state = self.model.init_decode_state(self.lanes)
             self.tok = jnp.zeros((self.lanes,), jnp.int32)
+            self._pin_state()
+
+    def _lane_sharding(self):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return NamedSharding(self.mesh, P("data"))
+
+    def _pin_state(self) -> None:
+        """Re-commit the live state to the lane-sharded layout
+        (`runtime.sharding.lane_pspecs`: DecodeState P("data") on the
+        lane axis, tok P("data")). Admission/resume splices run as plain
+        jits whose inferred output shardings may drift; pinning before
+        each decode dispatch keeps the shard_map'd block's input layout
+        stable so it compiles ONCE and never reshards mid-stream. A
+        no-op without a mesh, and free when the layout already matches
+        (device_put to an identical sharding is the identity)."""
+        if self.mesh is None or self.state is None:
+            return
+        from repro.runtime.sharding import lane_shardings
+        if self._state_shardings is None:
+            self._state_shardings = lane_shardings(self.state, self.mesh)
+        self.state = jax.device_put(self.state, self._state_shardings)
+        self.tok = jax.device_put(self.tok, self._lane_sharding())
 
     def _padded_prompt(self, req: Request) -> Tuple[np.ndarray, int]:
         """(padded prompt, bucket width) under this loop's bucket policy."""
@@ -1445,7 +1545,40 @@ class ServeLoop:
         st.preemptions += 1
         st.lane = -1
         self.counters["preemptions"] += 1
+        self._cache_insert_preempted(req, fresh)
         self._requeue(req)
+
+    def _cache_insert_preempted(self, req: Request, fresh) -> None:
+        """Preemption-aware prefix caching: instead of idling on the
+        Request until resume, the captured snapshot ALSO feeds the radix
+        trie as a rows donor when its prompt prefix is still slot-aligned
+        (`surgery.prefix_slot_aligned` via `cache_prefix_rows`) — a
+        re-admitted sibling prompt then resumes its chunked prefill from
+        the victim's rows. The gate naturally refuses decode-advanced
+        captures (step > prompt length after the first emitted token) and
+        quantized/latent caches, so only donors whose rows equal the
+        pre-pruning workspace bit-for-bit get in; grid conditions mirror
+        `_cache_insert_finalized` (prompt on the resume chunk grid, chunk
+        == cfg.attn_chunk for exact f32 acc association)."""
+        pc = self.prefix_cache
+        if pc is None or not req.reuse_prefix:
+            return
+        c = self.chunk_prefill
+        n = len(req.prompt)
+        if not (self._rows_reuse and n % c == 0
+                and c == self.model.cfg.attn_chunk):
+            return
+        kv = getattr(fresh, "kv", None)
+        if kv is None:
+            return
+        # cache_prefix_rows checks alignment on the light fields
+        # (fill/step/pos/valid) before pulling k/v/acc to host, so a
+        # refused donor costs no heavy device->host copy
+        rows = cache_prefix_rows(kv, n)
+        if rows is not None:
+            pc.insert_rows(req.prompt, RowsEntry(n, *rows))
+            self.counters["preempt_cache_inserts"] += 1
+        self._sync_cache_counters()
 
     def _requeue(self, req: Request) -> None:
         """Re-insert a preempted request at its arrival rank: it resumes
@@ -1498,11 +1631,15 @@ class ServeLoop:
     def predicted_free_blocks(self) -> Dict[int, int]:
         """Per-active-lane drain prediction: decode blocks until the
         lane frees. The expected remaining tokens are the lane's unspent
-        budget, bounded by the observed mean EOS-termination length
-        (minus what the lane already emitted) once EOS terminations
-        dominate the completed traffic — at least 4 observed and no
-        fewer than budget exhaustions — so EOS-heavy traffic predicts
-        earlier than its worst-case budget."""
+        budget, bounded by an observed mean EOS-termination length
+        (minus what the lane already emitted). The bound is CLASS-LOCAL
+        first: a lane whose (priority, bucket) class has accumulated at
+        least 4 EOS completions uses that class's own mean — short
+        bursty and long bulk traffic stop polluting each other's
+        forecasts when they mix. Below the class sample floor the
+        global mean applies under the original gate (at least 4
+        observed EOS overall and no fewer than budget exhaustions), so
+        EOS-heavy traffic predicts earlier than its worst-case budget."""
         eos_mean = None
         if (len(self._eos_lens) >= 4
                 and len(self._eos_lens) >= self._budget_done):
@@ -1511,8 +1648,15 @@ class ServeLoop:
         for lane in np.flatnonzero(self.active):
             lane = int(lane)
             exp = int(self.remaining[lane])
-            if eos_mean is not None:
-                exp = min(exp, max(1, round(eos_mean)
+            mean = eos_mean
+            rid = self._lane_rid[lane]
+            st = self.stats.get(rid) if rid is not None else None
+            if st is not None:
+                cell = self._eos_by_class.get((st.priority, st.bucket))
+                if cell is not None and len(cell) >= 4:
+                    mean = float(np.mean(cell))
+            if mean is not None:
+                exp = min(exp, max(1, round(mean)
                                    - len(self.outputs[lane])))
             out[lane] = max(1, math.ceil(exp / self.block))
         return out
@@ -1704,15 +1848,24 @@ class ServeLoop:
         arrival passed are drained once into their bucket's FIFO deque,
         the target bucket comes from the deque heads, and the group is
         popped from one deque — never a scan over the arrived backlog.
+
+        Under a lane mesh admission is SHARD-AWARE: the scheduler tracks
+        free lanes per shard (`shard_free_lanes`) and each round admits
+        into ONE shard's lane rows — the shard with the most free lanes
+        (lowest index on ties) — so a grouped prefill's `lanes_insert`
+        splice and the subsequent `write_token_stacked` scatters stay
+        shard-local; the loop covers the remaining shards on its next
+        iterations. When preemption frees a lane, the next round's
+        most-free shard IS the victim's shard, so the admission lands on
+        the lane that was freed for it. A 1-shard engine reduces exactly
+        to the unsharded free-lane list.
         """
         n = 0
         while True:
             self._drain_arrivals(self._now())
             if self._arrived_count == 0 and not self._reserved:
                 break
-            free = [int(lane) for lane in np.flatnonzero(~self.active)
-                    if self._pending is None
-                    or int(lane) != self._pending.lane]
+            free = max(self.shard_free_lanes(), key=len)
             if not free:
                 if self._try_preempt():
                     continue
@@ -1797,6 +1950,26 @@ class ServeLoop:
         else:
             self._admit_group(free[:len(group)], group)
         return len(group)
+
+    # -- shard accounting ----------------------------------------------------
+
+    def _shard_of(self, lane: int) -> int:
+        """Shard owning `lane`: the P("data") layout gives each shard a
+        contiguous block of lanes_per_shard lane rows."""
+        return lane // self.lanes_per_shard
+
+    def shard_free_lanes(self) -> List[List[int]]:
+        """Free (admittable) lanes grouped by shard — the scheduler's
+        shard-local admission view. A pending sliced prefill's reserved
+        lane is excluded, same as the unsharded free-lane rule. Without
+        a mesh this is a single list (shards == 1)."""
+        free: List[List[int]] = [[] for _ in range(self.shards)]
+        for lane in np.flatnonzero(~self.active):
+            lane = int(lane)
+            if self._pending is not None and lane == self._pending.lane:
+                continue
+            free[self._shard_of(lane)].append(lane)
+        return free
 
     def admit(self, prompts: np.ndarray):
         """Deprecated legacy all-lanes admission: prompts
@@ -1889,16 +2062,29 @@ class ServeLoop:
         window = self._decode_window(steps)
         self._windows.add(window)
         self.counters["decode_windows"] = len(self._windows)
-        fn = _lanes_block_fn(_model_key(self.model), steps, window)
+        fn = _lanes_block_fn(_model_key(self.model), steps, window,
+                             self.mesh)
         was_active = self.active.copy()
+        if self.mesh is None:
+            def put(a, dtype=None):
+                return jnp.asarray(a, dtype)
+        else:
+            # commit every host-side lane array to the P("data") layout
+            # (and re-pin the state after any admission splice) so the
+            # shard_map'd block never inserts input reshards
+            self._pin_state()
+            lane_sh = self._lane_sharding()
+
+            def put(a, dtype=None):
+                return jax.device_put(np.asarray(a, dtype), lane_sh)
         self.state, self.tok, active, rem, keys, toks, emitted = fn(
             self.params, self.state, self.tok,
-            jnp.asarray(self.active), jnp.asarray(self.remaining),
-            jnp.asarray(self.lane_eos, jnp.int32),
-            jnp.asarray(self._lane_keys, jnp.uint32),
-            jnp.asarray(self.lane_temp, jnp.float32),
-            jnp.asarray(self.lane_topk, jnp.int32),
-            jnp.asarray(self.lane_topp, jnp.float32))
+            put(self.active), put(self.remaining),
+            put(self.lane_eos, np.int32),
+            put(self._lane_keys, np.uint32),
+            put(self.lane_temp, np.float32),
+            put(self.lane_topk, np.int32),
+            put(self.lane_topp, np.float32))
         self._lane_keys = np.asarray(keys).astype(np.uint32)
         self.counters["decode_blocks"] += 1
         # knob values ride in as [lanes] arrays, so the jit cache holds ONE
@@ -1908,6 +2094,10 @@ class ServeLoop:
         host_emit = np.asarray(emitted)                    # [steps, lanes]
         self.active = np.asarray(active).copy()
         self.remaining = np.asarray(rem).astype(np.int32)
+        # per-shard emission accounting (host-side — the ONLY cross-shard
+        # traffic the sharded engine has)
+        self._shard_tokens += host_emit.sum(axis=0).reshape(
+            self.shards, self.lanes_per_shard).sum(axis=1)
         now = self._now()
         for lane in np.flatnonzero(host_emit.any(axis=0)):
             lane = int(lane)
@@ -1943,6 +2133,10 @@ class ServeLoop:
         if st.max_new > 0:                     # drain-prediction statistics
             if self.remaining[lane] > 0:
                 self._eos_lens.append(len(st.tokens))
+                # class-local sample for predicted_free_blocks: EOS
+                # lengths cluster by traffic class, not globally
+                self._eos_by_class.setdefault(
+                    (st.priority, st.bucket), []).append(len(st.tokens))
             else:
                 self._budget_done += 1
 
@@ -2025,6 +2219,18 @@ class ServeLoop:
         t_begin = min(s.t_arrival for s in self.completed)
         wall = max(t_end - t_begin, 1e-9)
         ttfts = [s.ttft for s in self.completed]
+        shard_rows: Dict[str, float] = {}
+        if self.shards > 1:
+            # per-shard throughput + the dispatch-normalized rate the
+            # scaling acceptance row is built on: wall-clock cannot scale
+            # on forced host devices, tokens per decode-block dispatch can
+            blocks = max(self.counters["decode_blocks"], 1)
+            shard_rows["shards"] = float(self.shards)
+            for i, t in enumerate(self._shard_tokens):
+                shard_rows[f"shard{i}_tokens"] = float(t)
+                shard_rows[f"shard{i}_tok_s"] = float(t) / wall
+            shard_rows["tokens_per_dispatch"] = (
+                float(self._shard_tokens.sum()) / blocks)
         return {
             **counters,
             "requests": float(len(self.completed)),
@@ -2038,6 +2244,7 @@ class ServeLoop:
             "p50_ttft_s": float(np.percentile(ttfts, 50)),
             "p99_ttft_s": float(np.percentile(ttfts, 99)),
             "prefill_programs": float(len(self._prefill_shapes)),
+            **shard_rows,
             **prefix,
         }
 

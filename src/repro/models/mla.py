@@ -20,8 +20,9 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, PruneConfig
 from repro.core import quant, scoring, topk
-from repro.core.cache import (KVCache, prefill_fill, protected_mask,
-                              write_token)
+from repro.core.cache import (KVCache, _token_writes, layer_window,
+                              prefill_fill, protected_mask, write_token,
+                              write_token_stacked)
 from repro.core.topk import NEG_INF
 from repro.models.layers import dense_init, rope
 from repro.runtime.sharding import shard
@@ -204,6 +205,81 @@ def mla_decode(p, x, cfg: ModelConfig, cache: KVCache, prune: PruneConfig
     q_abs = jnp.einsum("bhn,khn->bhk", q_nope.astype(jnp.float32),
                        w_uk.astype(jnp.float32))
     q_full = jnp.concatenate([q_abs, q_rope.astype(jnp.float32)], -1)
+    ctx, cache = _latent_attend(cache, q_full, cfg, prune)
+    out = jnp.einsum("bhk,khv->bhv", ctx, w_uv.astype(jnp.float32))
+    y = out.reshape(b, h * m.v_dim).astype(x.dtype) @ p["wo"]
+    return y, cache
+
+
+def mla_decode_stacked(p, x, cfg: ModelConfig, kv: KVCache, li,
+                       prune: PruneConfig, window, active
+                       ) -> Tuple[jax.Array, KVCache]:
+    """One IN-PLACE decode step at layer `li` of a layer-stacked LATENT
+    cache — the MLA twin of `core.attention.decode_attention_stacked`.
+
+    Same zero-copy split: reads go through a `dynamic_slice` window view
+    of layer `li` (`layer_window`), the token write mirrors into the view
+    for the attend and then lands in the full-width stacked buffers as
+    O(B·latent) scatters (Hk = 1) plus one O(window) accumulator-row
+    update, with the zero-valued `dep` index trick pinning the schedule
+    so XLA keeps the scan carry aliased (see decode_attention_stacked for
+    why that is load-bearing). `active` freezes finished lanes at the
+    source exactly as in the GQA path. x: [B,d] post-norm hidden.
+    Returns (y [B,d], stacked cache)."""
+    m = cfg.mla
+    b, _ = x.shape
+    h = cfg.n_heads
+    w = kv.slots if window is None or window >= kv.slots else window
+    view = layer_window(kv, li, w)
+    pos = view.step[:, None]                                # [B,1]
+    q_nope, q_rope = _queries(p, x[:, None, :], cfg, pos)
+    q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]             # [B,H,*]
+    u_new = _latents(p, x[:, None, :], cfg, pos)[:, 0]      # [B,latent]
+    slot, vals = _token_writes(view, u_new[:, None, :], None, prune)
+    # mirror the token write into the view (all lanes, matching the
+    # functional path — inactive lanes' results never land anywhere)
+    bi = jnp.arange(b)[:, None]
+    hi = jnp.arange(1)[None, :]
+    acc0 = view.acc
+    view = view._replace(
+        **{f: getattr(view, f).at[bi, hi, slot].set(v)
+           for f, v in vals.items()},
+        fill=jnp.minimum(view.fill + 1, w), step=view.step + 1)
+
+    w_uk, w_uv = _split_wkv_b(p, cfg)
+    q_abs = jnp.einsum("bhn,khn->bhk", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    q_full = jnp.concatenate([q_abs, q_rope.astype(jnp.float32)], -1)
+    ctx, view = _latent_attend(view, q_full, cfg, prune)
+    acc_row = view.acc
+    if active is not None:
+        acc_row = jnp.where(active[:, None, None], acc_row, acc0)
+    out = jnp.einsum("bhk,khv->bhv", ctx, w_uv.astype(jnp.float32))
+    y = out.reshape(b, h * m.v_dim).astype(x.dtype) @ p["wo"]
+    # storage writes LAST, index-dependent on the attend output (ctx
+    # covers every latent-buffer read, acc_row the accumulator reads —
+    # see decode_attention_stacked for why this pin is load-bearing)
+    dep = jnp.nan_to_num(0.0 * (jnp.sum(ctx) + jnp.sum(acc_row))
+                         ).astype(jnp.int32)
+    kv = write_token_stacked(kv, li, slot + dep,
+                             {f: v for f, v in vals.items() if f != "acc"},
+                             active)
+    li = jnp.asarray(li, jnp.int32) + dep
+    acc = jax.lax.dynamic_update_slice(kv.acc, acc_row[None],
+                                       (li, 0, 0, 0))
+    return y, kv._replace(acc=acc)
+
+
+def _latent_attend(cache: KVCache, q_full: jax.Array, cfg: ModelConfig,
+                   prune: PruneConfig) -> Tuple[jax.Array, KVCache]:
+    """Policy attend over a latent cache that already holds the new token.
+
+    q_full: [B,H,latent] absorbed query. Returns (ctx [B,H,kv_lora],
+    cache with the charge-domain accumulator updated). Shared verbatim by
+    the functional `mla_decode` and the in-place `mla_decode_stacked`
+    (which hands it a windowed read VIEW of the stacked cache), so both
+    paths are the same arithmetic — the basis of their bitwise parity."""
+    m = cfg.mla
     scale_dim = m.qk_nope_dim + m.qk_rope_dim
 
     if prune.policy == "unicaim":
@@ -252,7 +328,4 @@ def mla_decode(p, x, cfg: ModelConfig, cache: KVCache, prune: PruneConfig
         if prune.policy == "h2o":
             acc = scoring.accumulate(cache.acc, pr, 1, prune.acc_decay)
             cache = cache._replace(acc=acc)
-
-    out = jnp.einsum("bhk,khv->bhv", ctx, w_uv.astype(jnp.float32))
-    y = out.reshape(b, h * m.v_dim).astype(x.dtype) @ p["wo"]
-    return y, cache
+    return ctx, cache

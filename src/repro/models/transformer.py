@@ -30,7 +30,8 @@ from repro.models.attention_layer import (attention_decode,
                                           attention_prefill_chunk,
                                           attention_train, cross_attention,
                                           encode_cross_kv, init_attention)
-from repro.models.mla import init_mla, mla_decode, mla_prefill, mla_train
+from repro.models.mla import (init_mla, mla_decode, mla_decode_stacked,
+                              mla_prefill, mla_train)
 from repro.models.moe import apply_moe, apply_moe_ep_shardmap, init_moe
 from repro.models.ssm import (SSMState, init_ssm, init_ssm_state, ssm_decode,
                               ssm_train)
@@ -251,10 +252,15 @@ def _block_decode_stacked(p, x, cfg, prune, kv, li, kind: str, window,
                           active):
     """Residual block, one token, writing layer `li` of the stacked cache
     IN PLACE (scatter/windowed-row writes — no per-layer cache copy).
-    x: [B,d]. Returns (x, stacked cache). Attention-only kinds."""
+    x: [B,d]. Returns (x, stacked cache). Attention-only kinds
+    (dense/moe GQA and the mla_* latent-cache pair)."""
     h = L.apply_norm(p["ln1"], x[:, None, :], cfg.norm)[:, 0]
-    a, kv = attention_decode_stacked(p["attn"], h, cfg, kv, li, prune,
-                                     window, active)
+    if kind.startswith("mla"):
+        a, kv = mla_decode_stacked(p["attn"], h, cfg, kv, li, prune,
+                                   window, active)
+    else:
+        a, kv = attention_decode_stacked(p["attn"], h, cfg, kv, li, prune,
+                                         window, active)
     x = x + a
     h = L.apply_norm(p["ln2"], x[:, None, :], cfg.norm)[:, 0]
     if kind.endswith("moe"):
@@ -867,14 +873,17 @@ class Model:
 
     def supports_inplace_decode(self) -> bool:
         """True when the decode step can run the zero-copy in-place path:
-        a single scanned attention segment whose cache updates are
+        scanned attention segments whose cache updates are
         scatter/windowed-row writes into the layer-stacked buffers (the
-        stacked cache rides the layer scan as a CARRY, so donated buffers
-        stay input-output aliased end-to-end). Plain attention stacks
-        only — recurrent (ssm/hybrid), enc-dec cross-attention, and MLA
-        latent caches keep the functional path."""
+        stacked cache rides the layer scans as a CARRY, so donated
+        buffers stay input-output aliased end-to-end). Plain attention
+        stacks (dense/moe GQA) and the MLA latent cache
+        (`mla_decode_stacked` — mla_moe's two segments scan sequentially
+        over one stacked cache); recurrent (ssm/hybrid) and enc-dec
+        cross-attention keep the functional path."""
         cfg = self.cfg
-        return cfg.family in ("dense", "moe") and cfg.mla is None
+        return (cfg.family in ("dense", "moe") and cfg.mla is None) \
+            or cfg.family == "mla_moe"
 
     def decode_step(self, params, state: DecodeState, token: jax.Array,
                     window: Optional[int] = None,
@@ -926,24 +935,33 @@ class Model:
         its token row back by scatter (`core/attention.decode_attention_
         stacked`), so no layer ever materializes a fresh cache buffer —
         the per-step copy floor of the xs/ys functional scan is gone and
-        XLA aliases the donated DecodeState straight through."""
+        XLA aliases the donated DecodeState straight through. Multi-
+        segment families (mla_moe: mla_dense then mla_moe) run one scan
+        per segment with a running global layer offset into the same
+        stacked carry."""
         cfg = self.cfg
         prune = self.prune
         x = params["embed"][token].astype(_dtype(cfg.compute_dtype))
         if cfg.pos == "sinusoidal" and state.kv is not None:
             pos = state.kv.step[0][:, None]
             x = x + L.sinusoidal(pos, cfg.d_model)[:, 0].astype(x.dtype)
-        (kind, n), = [s for s in self._segments() if s[1] > 0]
+        kv = state.kv
+        li0 = 0
+        for i, (kind, n) in enumerate(self._segments()):
+            if n == 0:
+                continue
 
-        def body(carry, inp):
-            x, kv = carry
-            pl, li = inp
-            x, kv = _block_decode_stacked(pl, x, cfg, prune, kv, li, kind,
-                                          window, active)
-            return (x, kv), None
+            def body(carry, inp, kind=kind):
+                x, kv = carry
+                pl, li = inp
+                x, kv = _block_decode_stacked(pl, x, cfg, prune, kv, li,
+                                              kind, window, active)
+                return (x, kv), None
 
-        (x, kv), _ = xscan(body, (x, state.kv),
-                           (params[f"seg0_{kind}"], jnp.arange(n)))
+            (x, kv), _ = xscan(body, (x, kv),
+                               (params[f"seg{i}_{kind}"],
+                                jnp.arange(li0, li0 + n)))
+            li0 += n
         state = state._replace(kv=kv)
         return self._logits(params, x[:, None])[:, 0], state
 

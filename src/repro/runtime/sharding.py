@@ -250,6 +250,41 @@ def cache_logical_axes(path: str, ndim: int) -> Tuple[Optional[str], ...]:
     return axes
 
 
+def lane_pspecs(tree, mesh: Mesh, *, axis: int = 1):
+    """PartitionSpecs laying a stacked DecodeState out ``P("data")`` on
+    the LANE axis only — the data-parallel serving layout.
+
+    Every stacked decode-state array carries layers on axis 0 and lanes
+    (the serving batch) on axis 1 (`models/transformer.py` lane-surgery
+    contract), so each leaf shards axis `axis` over the mesh's ``data``
+    axis and replicates everything else. Unlike `decode_state_pspecs`
+    there is no fallback folding: lanes must divide the shard count
+    (asserted), heads/slots stay whole per shard, and the resulting
+    decode block is collective-free — each shard owns a contiguous
+    block of lanes end to end (cache, knobs, PRNG keys).
+    """
+    n = int(mesh.shape["data"])
+
+    def one(leaf):
+        assert leaf.ndim > axis and leaf.shape[axis] % n == 0, (
+            f"lane axis {axis} of shape {leaf.shape} not divisible by "
+            f"{n}-way data mesh")
+        cols: list = [None] * leaf.ndim
+        cols[axis] = "data"
+        while cols and cols[-1] is None:
+            cols.pop()
+        return P(*cols)
+
+    return jax.tree.map(one, tree)
+
+
+def lane_shardings(tree, mesh: Mesh, *, axis: int = 1):
+    """NamedShardings for `lane_pspecs` — feed straight to device_put."""
+    specs = lane_pspecs(tree, mesh, axis=axis)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
 def decode_state_pspecs(tree, mesh: Optional[Mesh] = None):
     """PartitionSpecs for a DecodeState pytree.
 

@@ -34,6 +34,21 @@ Prefix snapshots (prefix-sharing admission):
   prefix_slot_aligned(kv, length)          identity-layout check
   cache_prefix_rows(kv, length)            host rows [0, length) or None
 
+Both snapshot helpers also serve the preemption path: a victim lane
+captured before any decode step advanced it passes the identity-layout
+gate and donates its prefix rows to the radix trie instead of idling on
+the requeued Request (`ServeLoop._cache_insert_preempted`, counted by
+``counters["preempt_cache_inserts"]``).
+
+Lane-axis sharding layout (data-sharded serving):
+  lane_pspecs(tree, mesh, axis=1)          P("data") specs on the lane axis
+  lane_shardings(tree, mesh, axis=1)       ... as NamedShardings
+
+These place a stacked `DecodeState` (every leaf is [layers, lanes, ...])
+on a 1-D `"data"` mesh so `ServeLoop(mesh=...)`'s shard_map decode block
+runs collective-free; the splice helpers above stay host-side and
+shard-agnostic (device_put re-pins after surgery).
+
 All splices copy every cache field — including the int8/quantized
 mirrors, their scales, and the accumulated eviction scores — so
 per-lane pruning state stays exact across surgery; see the docstrings
@@ -52,6 +67,7 @@ from repro.models.transformer import (lane_insert as state_lane_insert,
                                       lane_select as state_lane_select,
                                       lane_slice as state_lane_slice,
                                       lanes_insert as state_lanes_insert)
+from repro.runtime.sharding import lane_pspecs, lane_shardings
 
 __all__ = [
     "state_lane_slice", "state_lane_insert", "state_lanes_insert",
@@ -59,4 +75,5 @@ __all__ = [
     "kv_lane_slice", "kv_lane_insert", "kv_lanes_insert", "kv_lane_reset",
     "slot_window", "slot_window_merge", "decode_window",
     "prefix_slot_aligned", "cache_prefix_rows",
+    "lane_pspecs", "lane_shardings",
 ]

@@ -240,6 +240,98 @@ def test_masked_block_inplace_parity():
     _assert_trees_equal(si, sf)
 
 
+# -- MLA latent-cache in-place path -------------------------------------------
+
+
+def _tiny_mla_model(kv_dtype="bf16"):
+    cfg = reduced(get_config("deepseek-v3-671b"))
+    prune = dataclasses.replace(
+        baselines.unicaim(heavy=48, reserve=16, select_k=16,
+                          sink_tokens=2, recent_window=8),
+        kv_dtype=kv_dtype)
+    model = Model(cfg, prune)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 32))),
+             "length": jnp.asarray([9, 26], jnp.int32)}
+    logits, state = jax.jit(model.prefill)(params, batch)
+    return model, params, state, jnp.argmax(logits, -1)
+
+
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8"])
+@pytest.mark.parametrize("window", [None, 32])
+def test_mla_inplace_decode_step_parity(kv_dtype, window):
+    """mla_moe rides the zero-copy path now: `mla_decode_stacked` over
+    the layer-stacked LATENT cache (two segments scanned sequentially
+    with a running global layer offset) is bitwise the functional
+    `mla_decode` step — logits and every DecodeState leaf, bf16 and
+    quantized latents, windowed and full-width."""
+    model, params, state, tok = _tiny_mla_model(kv_dtype)
+    assert model.supports_inplace_decode()
+    si, sf = state, state
+    ti, tf = tok, tok
+    step = jax.jit(model.decode_step,
+                   static_argnames=("window", "inplace"))
+    for _ in range(4):
+        li, si = step(params, si, ti, window=window, inplace=True)
+        lf, sf = step(params, sf, tf, window=window, inplace=False)
+        np.testing.assert_array_equal(np.asarray(li), np.asarray(lf))
+        ti, tf = jnp.argmax(li, -1), jnp.argmax(lf, -1)
+    _assert_trees_equal(si, sf)
+
+
+def test_mla_masked_block_inplace_parity():
+    """The serving block's in-place lane gating works on the latent
+    cache too: dropped scatters freeze finished MLA lanes exactly like
+    functional step + `state_lane_select`."""
+    model, params, state, tok = _tiny_mla_model()
+    active = jnp.asarray([True, False])
+    rem = jnp.asarray([6, 0], jnp.int32)
+    eos = jnp.int32(-1)
+    key = jax.random.PRNGKey(0)
+
+    fn = jax.jit(lambda st, tk, a, r: serve.decode_block_masked(
+        model, params, st, tk, a, r, eos, key, steps=3, window=None))
+    si, ti, ai, ri, _, toks_i, em_i = fn(state, tok, active, rem)
+
+    sf, tf, af, rf = state, tok, active, rem
+    toks_f, em_f = [], []
+    for _ in range(3):
+        lf, s_new = model.decode_step(params, sf, tf, inplace=False)
+        sf = state_lane_select(af, s_new, sf)
+        live = af & (rf > 0)
+        em = live & (tf != eos)
+        toks_f.append(np.asarray(tf))
+        em_f.append(np.asarray(em))
+        rf = rf - em.astype(rf.dtype)
+        af = em & (rf > 0)
+        tf = jnp.argmax(lf, -1).astype(tf.dtype)
+    np.testing.assert_array_equal(np.asarray(toks_i), np.stack(toks_f))
+    np.testing.assert_array_equal(np.asarray(em_i), np.stack(em_f))
+    _assert_trees_equal(si, sf)
+
+
+def test_mla_lanes_block_donation_surfaces_as_aliasing():
+    """Donation must surface as input→output aliasing for the MLA
+    stacked latent cache exactly as for the GQA cache — the zero-valued
+    dep pin in `mla_decode_stacked` keeps the scan carry aliased."""
+    model, params, state, tok = _tiny_mla_model()
+    fn = lambda p, st, tk, a, r, e, k, t, tk_, tp: \
+        serve.decode_block_lanes(model, p, st, tk, a, r, e, k, t, tk_,
+                                 tp, steps=3, window=None)
+    args = (params, state, tok, jnp.ones((B,), bool),
+            jnp.full((B,), 8, jnp.int32), jnp.full((B,), -1, jnp.int32),
+            jnp.broadcast_to(jax.random.PRNGKey(0), (B, 2)),
+            jnp.zeros((B,), jnp.float32), jnp.zeros((B,), jnp.int32),
+            jnp.zeros((B,), jnp.float32))
+    lowered = jax.jit(fn, donate_argnums=(1, 2, 3, 4, 6)).lower(*args)
+    text = lowered.as_text()
+    n_state_leaves = len(jax.tree.leaves(state))
+    aliased = len(re.findall(r"tf\.aliasing_output", text))
+    assert aliased >= n_state_leaves + 1, (
+        f"only {aliased} aliased args for {n_state_leaves} state leaves")
+
+
 # -- the in-place guarantee: aliasing + flat temp bytes -----------------------
 
 

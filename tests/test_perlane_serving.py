@@ -227,3 +227,24 @@ def test_predicted_free_blocks_uses_eos_stats(setup):
     assert loop.predicted_free_blocks() == {0: 1}    # bounded by the mean
     loop._budget_done = 5                      # budget exhaustion dominates
     assert loop.predicted_free_blocks() == {0: 25}
+
+
+def test_predicted_free_blocks_class_local(setup):
+    """Drain prediction is class-local first: a (priority, bucket) cell
+    with >= 4 EOS samples overrides the global mean — short bursty and
+    long bulk traffic stop polluting each other's forecasts — and below
+    the cell's sample floor the global mean applies unchanged."""
+    cfg, model, params = setup
+    loop = ServeLoop(model, params, lanes=1, eos=-1, block=4)
+    loop.submit(Request(prompt=_prompt(cfg, 16, 1), max_new=100,
+                        priority=2))
+    loop.schedule()
+    st = loop.stats[loop._lane_rid[0]]
+    loop._eos_lens = [40, 40, 40, 40]          # global mean 40 → 10 blocks
+    loop._eos_by_class[(st.priority, st.bucket)] = [4, 4, 4]
+    assert loop.predicted_free_blocks() == {0: 10}   # below the cell floor
+    loop._eos_by_class[(st.priority, st.bucket)].append(4)
+    assert loop.predicted_free_blocks() == {0: 1}    # class mean 4 → 1
+    # another class's samples never leak into this lane's forecast
+    loop._eos_by_class[(0, st.bucket)] = [80, 80, 80, 80]
+    assert loop.predicted_free_blocks() == {0: 1}

@@ -366,6 +366,67 @@ def test_legacy_surface_warns(setup):
         loop.step_block()
 
 
+# -- preemption-aware caching -------------------------------------------------
+
+
+def test_preempted_lane_feeds_prefix_cache(setup):
+    """A preempted lane's captured state donates its prefix rows to the
+    trie through the same slot-alignment gate as finalization — but only
+    when the capture is not decode-advanced (fill == step == prompt
+    length): an un-decoded victim donates, a mid-decode victim is
+    refused by the gate."""
+    cfg, model, params = setup
+    loop = _loop(model, params, lanes=1, prefix_cache_bytes=64 << 20)
+    p = _prompt(cfg, 32, 5)
+    h_v = loop.submit(Request(prompt=p, max_new=8, priority=0))
+    for _ in range(8):                         # drive the chunked prefill
+        loop.schedule()
+        loop._advance_chunked()
+        if loop.active.any():
+            break
+    assert loop.active.any()
+    loop.submit(Request(prompt=_prompt(cfg, 16, 6), max_new=4, priority=5))
+    loop.schedule()                            # evicts the un-decoded victim
+    assert loop.counters["preemptions"] == 1
+    assert loop.counters["preempt_cache_inserts"] == 1
+
+    # a sibling sharing the 32-token prefix resumes from the donated rows
+    sib = np.concatenate([p, _prompt(cfg, 16, 7)])
+    h_s = loop.submit(Request(prompt=sib, max_new=4))
+    loop.run()
+    assert h_s.stats.prefix_tokens == 32
+    assert loop.counters["prefix_copies"] >= 1
+    cold = _loop(model, params, lanes=1)
+    h_c = cold.submit(Request(prompt=sib, max_new=4))
+    cold.run()
+    assert h_s.tokens == h_c.tokens            # donated rows are bitwise
+    assert h_v.tokens == _solo_tokens(model, params,
+                                      dict(prompt=p, max_new=8))
+
+    # round 2: a victim that already decoded a block is refused
+    h2 = loop.submit(Request(prompt=_prompt(cfg, 32, 8), max_new=8,
+                             priority=0))
+    for _ in range(8):
+        loop.schedule()
+        loop._advance_chunked()
+        if loop.active.any():
+            break
+    loop._step_block()
+    loop.submit(Request(prompt=_prompt(cfg, 16, 9), max_new=4, priority=5))
+    loop.schedule()
+    assert loop.counters["preemptions"] == 2
+    assert loop.counters["preempt_cache_inserts"] == 1   # gate refused
+    loop.run()
+    assert h2.done
+
+
+def _solo_tokens(model, params, req_kw):
+    loop = _loop(model, params, lanes=1)
+    h = loop.submit(Request(**req_kw))
+    loop.run()
+    return h.tokens
+
+
 # -- surgery namespace --------------------------------------------------------
 
 
