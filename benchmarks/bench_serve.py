@@ -26,6 +26,18 @@ Rows (CSV: name,us_per_call,derived):
                             deterministic count-class rows for CI
   serve_slo_{hi,bulk}_<tag> per-class p99/mean TTFT; the burst row adds
                             SLO attainment against the bulk-p99 TTFT
+  serve_fault_clean_<tag>   fault-sweep reference: the identical workload
+                            with no chaos config — its wall row is the
+                            sentinel's clean-path overhead (warn-only)
+  serve_fault_injected_<tag> same workload under 1%-per-(step,lane) seeded
+                            logit corruption: every affected request must
+                            recover via quarantine+retry token-identically
+                            (identical=1 share row) — quarantine/retry
+                            counters are deterministic count-class rows
+  serve_fault_flood_<tag>   chaos queue flood against a bounded queue
+                            (max_queue): served/rejected/shed split is
+                            deterministic; tok/s + p99 TTFT of the
+                            admitted population
 
 'Useful tokens' counts each request's own `max_new`: the old loop forces
 every lane in a group to the group's max budget over equally padded
@@ -52,6 +64,7 @@ from repro.configs.base import get_config, reduced
 from repro.core import baselines
 from repro.launch.serve import Request, ServeLoop
 from repro.models.transformer import Model
+from repro.runtime.chaos import ChaosConfig, flood
 
 BLOCK = 8
 
@@ -130,6 +143,25 @@ def _run_priority(model, params, vocab, lanes, seed=7):
     for s in stats:
         by_class.setdefault(s.priority, []).append(s)
     return by_class, loop, dt
+
+
+def _run_fault(model, params, reqs, lanes, chaos=None, max_queue=0):
+    """One fault-sweep leg: the Request-handle API (token streams must be
+    comparable across legs), optional chaos injection + queue bound."""
+    loop = ServeLoop(model, params, lanes=lanes, eos=-1, block=BLOCK,
+                     chaos=chaos, max_queue=max_queue)
+    hs = [loop.submit(Request(prompt=p, max_new=mn)) for p, mn in reqs]
+    t0 = time.perf_counter()
+    loop.run()
+    return hs, loop, time.perf_counter() - t0
+
+
+def _done_row(loop, dt):
+    """tok/s + p99 TTFT over the requests that completed "done"."""
+    done = [s for s in loop.completed if s.outcome == "done"]
+    toks = sum(len(s.tokens) for s in done)
+    ttfts = np.asarray([s.ttft for s in done] or [0.0])
+    return toks / dt, float(np.percentile(ttfts, 99)), len(done)
 
 
 def _slo_row(stats, slo_s):
@@ -372,6 +404,64 @@ def run():
                 "slo_bulk_p99_ttft_s": bulk["p99_ttft_s"],
                 "slo_hi_requests": hi["requests"],
                 "slo_bulk_requests": bulk["requests"],
+            })
+            # fault sweep: one workload served three ways — clean (the
+            # sentinel's all-clean lax.cond path; its wall row is the
+            # clean-path overhead, warn-only), under seeded 1%-per-
+            # (step, lane) logit corruption (every affected request must
+            # recover via quarantine+retry with the clean run's exact
+            # stream — deterministic counters, count-class in CI), and
+            # as a chaos queue flood against a bounded queue (the
+            # served/rejected/shed split is a pure function of the
+            # submission sequence).
+            freqs = _request_set(cfg.vocab_size, max(12, 3 * lanes),
+                                 (17, 24, 33), (8, 12), seed=9)
+            inj = ChaosConfig(seed=13, logit_fault_rate=0.01)
+            for c in (None, inj):
+                _run_fault(model, params, freqs, lanes, chaos=c)  # warmup
+            hs_cl, loop_cl, dt_cl = _run_fault(model, params, freqs, lanes)
+            hs_in, loop_in, dt_in = _run_fault(model, params, freqs, lanes,
+                                               chaos=inj)
+            ident = float([h.tokens for h in hs_in]
+                          == [h.tokens for h in hs_cl])
+            tok_cl, p99_cl, _ = _done_row(loop_cl, dt_cl)
+            tok_in, p99_in, _ = _done_row(loop_in, dt_in)
+            emit(f"serve_fault_clean_{tag}", dt_cl * 1e6,
+                 f"tok_s={tok_cl:.1f};p99_ttft_s={p99_cl:.3f}")
+            emit(f"serve_fault_injected_{tag}", dt_in * 1e6,
+                 f"tok_s={tok_in:.1f};p99_ttft_s={p99_in:.3f};"
+                 f"identical={ident:.0f};"
+                 f"quarantined={loop_in.counters['quarantined_lanes']:.0f};"
+                 f"retried={loop_in.counters['retried_requests']:.0f};"
+                 f"failed={loop_in.counters['failed_requests']:.0f}")
+            fl = [(np.asarray(kw["prompt"]), kw["max_new"]) for kw in
+                  flood(cfg.vocab_size, 6 * lanes, length=24, max_new=8,
+                        seed=21)]
+            _run_fault(model, params, fl, lanes, max_queue=2 * lanes)
+            hs_f, loop_f, dt_f = _run_fault(model, params, fl, lanes,
+                                            max_queue=2 * lanes)
+            tok_f, p99_f, served = _done_row(loop_f, dt_f)
+            emit(f"serve_fault_flood_{tag}", dt_f * 1e6,
+                 f"tok_s={tok_f:.1f};p99_ttft_s={p99_f:.3f};"
+                 f"served={served:.0f};"
+                 f"rejected={loop_f.counters['rejected_requests']:.0f};"
+                 f"shed={loop_f.counters['shed_requests']:.0f}")
+            summary.update({
+                "fault_requests": float(len(freqs)),
+                "fault_clean_tok_s": tok_cl,
+                "fault_injected_tok_s": tok_in,
+                "fault_replay_identical": ident,
+                "fault_quarantined": float(
+                    loop_in.counters["quarantined_lanes"]),
+                "fault_retried": float(
+                    loop_in.counters["retried_requests"]),
+                "fault_clean_p99_ttft_s": p99_cl,
+                "fault_injected_p99_ttft_s": p99_in,
+                "flood_requests": float(len(fl)),
+                "flood_served": float(served),
+                "flood_rejected": float(
+                    loop_f.counters["rejected_requests"]),
+                "flood_p99_ttft_s": p99_f,
             })
             summary.update({
                 "prefix_requests": float(len(shared)),

@@ -33,6 +33,11 @@ counts and tokens-per-dispatch are deterministic on the fixed saturation
 trace) except the wall-clock TTFT rows, which stay informational, and
 the ``*identical*`` replay flag, which is share-class so a drop below
 the committed 1.0 warns (the tier-1 sharded suite hard-fails it).
+Fault-tolerance counters (``*retr*`` / ``*reject*`` / ``*degrad*`` /
+``*quarantin*`` / ``*cancel*`` / ``*deadline*`` / ``*shed*``) are
+count-class: the chaos harness injects by (seed, block index), so the
+recovery counts on the committed fault sweep are exactly reproducible —
+growth means a recovery-path regression, not noise.
 ``*_p50`` keys are sibling medians of the min-based ``*_us`` rows
 (see ``common.Timing``): they are never compared against the baseline,
 but when a fresh run's p50/min ratio exceeds ``NOISE_RATIO`` the run is
@@ -71,6 +76,13 @@ def classify(key: str) -> str:
     if "copies" in key or "tokens_reused" in key or key.endswith("_hits") \
             or "reserv" in key:
         return "reuse"
+    # fault-tolerance counters are deterministic under the seeded chaos
+    # harness: more retries/quarantines/rejections/degradations on the
+    # identical injected-fault trace means a recovery-path regression
+    if "retr" in key or "reject" in key or "degrad" in key \
+            or "quarantin" in key or "cancel" in key or "deadline" in key \
+            or "shed" in key:
+        return "count"
     if "compile" in key or "dispatch" in key or "windows" in key \
             or "preempt" in key or "block_programs" in key:
         return "count"

@@ -287,8 +287,8 @@ def _next_token_lanes(logits, keys, temperature, top_k, top_p):
 
 
 def decode_block_lanes(model: Model, params, state, tok, active, rem,
-                       eos, keys, temperature, top_k, top_p, steps: int,
-                       window: Optional[int] = None):
+                       eos, keys, temperature, top_k, top_p, fault=None,
+                       steps: int = 1, window: Optional[int] = None):
     """`steps` decode steps with per-lane termination AND per-lane
     sampling knobs — the engine's decode block.
 
@@ -308,8 +308,23 @@ def decode_block_lanes(model: Model, params, state, tok, active, rem,
     per step via its OWN split chain, so a lane's sampled stream is a
     function of (its initial key, steps resident) alone — independent
     of its neighbours, its lane index, and any preempt/resume boundary.
-    Returns (state, tok, active, rem, keys, toks [steps, B],
-    emitted [steps, B]).
+
+    **Non-finite sentinel.** Every step checks each lane's logits for
+    NaN/Inf (a numerical fault: bad weights row, flaky interconnect,
+    injected chaos). A poisoned lane is deactivated IN-DEVICE before it
+    can emit from the corrupt logits and flagged in the returned
+    `poison` mask; the host quarantines it and retries the request
+    deterministically. The all-clean path is behind a `lax.cond` on
+    `any(active & ~finite)` — when nothing is poisoned the carried
+    masks pass through untouched and the block stays bitwise-identical
+    to the sentinel-free engine (lanes are independent: a NaN can never
+    cross the batch axis, so neighbours stay exact). `fault` (optional
+    [steps, B] bool, a RUNTIME array) overwrites masked lanes' logits
+    with NaN before the check — the injection point used by
+    `runtime/chaos.py`; an all-False mask is a bitwise no-op.
+
+    Returns (state, tok, active, rem, keys, poison [B],
+    toks [steps, B], emitted [steps, B]).
     """
     inplace = model.supports_inplace_decode()
     eos = jnp.asarray(eos, jnp.int32)
@@ -318,8 +333,8 @@ def decode_block_lanes(model: Model, params, state, tok, active, rem,
     top_p = jnp.asarray(top_p, jnp.float32)
     sampled_any = jnp.any(temperature > 0.0)
 
-    def body(carry, _):
-        state, tok, active, rem, keys = carry
+    def body(carry, frow):
+        state, tok, active, rem, keys, poison = carry
         if inplace:
             logits, state = model.decode_step(params, state, tok,
                                               window=window, active=active)
@@ -327,6 +342,17 @@ def decode_block_lanes(model: Model, params, state, tok, active, rem,
             logits, new_state = model.decode_step(params, state, tok,
                                                   window=window)
             state = state_lane_select(active, new_state, state)
+        if frow is not None:
+            logits = jnp.where(frow[:, None],
+                               jnp.asarray(jnp.nan, logits.dtype), logits)
+        finite = jnp.all(jnp.isfinite(logits), axis=-1)
+        bad = active & ~finite
+        # all-clean fast path: healthy blocks take the identity branch,
+        # so the sentinel never perturbs a clean lane's masks or stream
+        poison, active = jax.lax.cond(
+            jnp.any(bad),
+            lambda p, a: (p | bad, a & finite),
+            lambda p, a: (p, a), poison, active)
         live = active & (rem > 0)
         emit = live & (tok != eos)
         rem = rem - emit.astype(rem.dtype)
@@ -342,17 +368,25 @@ def decode_block_lanes(model: Model, params, state, tok, active, rem,
             return keys, jnp.argmax(logits, -1)
 
         keys, nxt = jax.lax.cond(sampled_any, sample, greedy, keys)
-        return (state, nxt.astype(tok.dtype), active, rem, keys), (tok,
-                                                                   emit)
+        return (state, nxt.astype(tok.dtype), active, rem, keys,
+                poison), (tok, emit)
 
-    (state, tok, active, rem, keys), (toks, emitted) = jax.lax.scan(
-        body, (state, tok, active, rem, keys), None, length=steps)
-    return state, tok, active, rem, keys, toks, emitted
+    poison = jnp.zeros(tok.shape, bool)
+    carry = (state, tok, active, rem, keys, poison)
+    if fault is None:
+        step = lambda c, _: body(c, None)
+        carry, (toks, emitted) = jax.lax.scan(step, carry, None,
+                                              length=steps)
+    else:
+        fault = jnp.asarray(fault, bool)                   # [steps, B]
+        carry, (toks, emitted) = jax.lax.scan(body, carry, fault)
+    state, tok, active, rem, keys, poison = carry
+    return state, tok, active, rem, keys, poison, toks, emitted
 
 
 def decode_block_lanes_sharded(model: Model, mesh, params, state, tok,
                                active, rem, eos, keys, temperature,
-                               top_k, top_p, steps: int,
+                               top_k, top_p, fault=None, steps: int = 1,
                                window: Optional[int] = None):
     """`decode_block_lanes` over a lane batch sharded ``P("data")``.
 
@@ -380,15 +414,22 @@ def decode_block_lanes_sharded(model: Model, mesh, params, state, tok,
     lane = P("data")
     body = functools.partial(decode_block_lanes, model, steps=steps,
                              window=window)
+    in_specs = (P(), state_specs, lane, lane, lane, lane,
+                P("data", None), lane, lane, lane)
+    args = (params, state, tok, active, rem, eos, keys, temperature,
+            top_k, top_p)
+    if fault is not None:
+        # the [steps, lanes] fault mask shards on its LANE axis, like
+        # the per-step outputs — injection stays shard-local too
+        in_specs += (P(None, "data"),)
+        args += (fault,)
     fn = shard_map(
         body, mesh=mesh,
-        in_specs=(P(), state_specs, lane, lane, lane, lane,
-                  P("data", None), lane, lane, lane),
-        out_specs=(state_specs, lane, lane, lane, P("data", None),
+        in_specs=in_specs,
+        out_specs=(state_specs, lane, lane, lane, P("data", None), lane,
                    P(None, "data"), P(None, "data")),
         check_vma=False)
-    return fn(params, state, tok, active, rem, eos, keys, temperature,
-              top_k, top_p)
+    return fn(*args)
 
 
 def donation_mode() -> str:
@@ -631,6 +672,11 @@ class Request:
     later). `reuse_prefix=False` opts the request out of the prefix
     cache in both directions: its admission never matches a cached
     prefix and its prefill is never inserted as a donor.
+    `deadline_s` is a completion deadline in seconds from ARRIVAL: a
+    request still waiting or still decoding when it expires resolves
+    with outcome ``"deadline"`` (partial tokens kept; its lane frees at
+    the next block boundary). `RequestHandle.cancel()` resolves the
+    same way with outcome ``"cancelled"``.
     Identity-compared (eq=False): the scheduler removes grouped requests
     from the queue by identity, and field equality over an ndarray
     prompt is ill-defined anyway."""
@@ -641,11 +687,19 @@ class Request:
     sampling: Optional[SamplingParams] = None
     priority: int = 0
     reuse_prefix: bool = True
+    deadline_s: Optional[float] = None   # completion deadline from arrival
     # engine-assigned fields — never pass these to the constructor
     rid: int = -1
     bucket: int = 0            # memoized pad width under the loop's grid
     admitted: bool = False     # lazy-prune marker for the FIFO-order deque
     resume: Optional["_ResumeState"] = None   # set while preempted
+    cancelled: bool = False    # set by RequestHandle.cancel()
+    retries: int = 0           # quarantine retries consumed so far
+    legacy: bool = False       # came through a deprecated surface
+    # first-admission PRNG draw, memoized so a quarantine RETRY replays
+    # the identical sampled stream even when the seed came from the loop
+    # stream (see `_seed_keys`) — never pass to the constructor either
+    seed_keys: Optional[tuple] = None
 
 
 class RequestHandle:
@@ -670,6 +724,19 @@ class RequestHandle:
     def tokens(self) -> List[int]:
         """Generated token ids so far (complete once `done`)."""
         return list(self.stats.tokens)
+
+    @property
+    def outcome(self) -> Optional[str]:
+        """Terminal outcome — ``"done" | "cancelled" | "deadline" |
+        "rejected" | "failed"`` — or None while the request is live."""
+        return self.stats.outcome if self.done else None
+
+    def cancel(self) -> bool:
+        """Request cancellation. Returns True if the request was still
+        live (it resolves with outcome ``"cancelled"`` at the next
+        scheduler round — a decoding lane frees at the next block
+        boundary); False if it already reached a terminal outcome."""
+        return self._loop.cancel(self.rid)
 
     def __repr__(self) -> str:
         return f"RequestHandle(rid={self.rid}, done={self.done})"
@@ -698,6 +765,11 @@ class RequestStats:
     prefix_exact: bool = False  # whole prompt hit (state splice, no prefill)
     priority: int = 0          # scheduling class (higher = more urgent)
     preemptions: int = 0       # times this request was evicted + requeued
+    outcome: str = "done"      # terminal: done|cancelled|deadline|rejected|failed
+    detail: str = ""           # human-readable reason for a non-done outcome
+    retries: int = 0           # quarantine retries this request consumed
+    retry_after: float = 0.0   # suggested resubmit delay (outcome "rejected")
+    degraded: bool = False     # admitted with a degraded-mode budget cap
 
     @property
     def latency(self) -> float:
@@ -887,6 +959,28 @@ class ServeLoop:
     deque order; the global-FIFO head used by the off-load path and the
     aging bound is tracked with a lazily-pruned arrival-order deque.
 
+    **Fault tolerance & graceful degradation.** `Request(deadline_s=…)`
+    and `RequestHandle.cancel()` terminate waiting or decoding requests
+    with outcomes ``"deadline"``/``"cancelled"`` (active lanes free at
+    the next block boundary through the in-device active mask — no
+    recompile; partial tokens kept). The decode block's non-finite
+    sentinel flags lanes whose logits went NaN/Inf; the loop quarantines
+    them and retries the request by full deterministic replay (memoized
+    admission seed → token-identical stream, greedy AND sampled), up to
+    `max_retries` before outcome ``"failed"``. `max_queue` bounds the
+    waiting population: an overflowing submit is rejected — or sheds a
+    strictly lower-priority waiter — with outcome ``"rejected"`` and a
+    `retry_after` hint. A `degrade` ladder steps the engine down under
+    sustained pressure (smaller decode block → tighter decode window,
+    then budget caps for new admissions) and back up on hysteresis;
+    token VALUES never change, only schedule shape. `chaos` attaches a
+    deterministic `runtime.chaos.ChaosConfig` fault injector (logit
+    corruption / dispatch stalls / shard blackouts) for testing every
+    path above. Un-admittable submissions (empty prompt, `max_new<=0`,
+    prompt exceeding a pinned bucket grid) resolve to structured
+    rejections at submit, and `run()` is hang-proof: a stuck queue
+    resolves to rejections instead of spinning (`_fail_stuck`).
+
     **Chunked-prefill admission** (`chunk_prefill=C`, Sarathi-style): a
     prompt whose bucket exceeds C is prefilled in C-token slices that
     interleave with decode blocks — one slice, one decode block, … — so a
@@ -909,7 +1003,10 @@ class ServeLoop:
                  window: Union[str, None] = "auto",
                  window_grid: Union[str, int] = "pow2",
                  prefix_cache_bytes: int = 0,
-                 mesh=None):
+                 mesh=None, max_retries: int = 2, max_queue: int = 0,
+                 degrade: Union[str, Sequence[Dict[str, int]], None] = None,
+                 degrade_high: int = 0, degrade_low: int = 0,
+                 chaos=None):
         self.model = model
         self.params = params
         self.lanes = lanes
@@ -1051,6 +1148,40 @@ class ServeLoop:
         # so short bursty and long bulk traffic stop polluting each
         # other's free-lane forecasts (global mean is the fallback)
         self._eos_by_class: Dict[Tuple[int, int], List[int]] = {}
+        # -- fault tolerance -------------------------------------------------
+        # quarantine retries per request before outcome "failed"
+        self.max_retries = max(0, max_retries)
+        # bounded admission: > 0 caps the WAITING population; an
+        # overflowing submit is rejected (or sheds a strictly
+        # lower-priority waiter) with outcome "rejected" + retry_after
+        self.max_queue = max(0, max_queue)
+        # degradation ladder: each level maps to overrides applied under
+        # queue pressure — "block" (smaller decode block → tighter decode
+        # window via `decode_window(fill, steps)`, token values
+        # UNCHANGED) and "max_new_cap" (budget cap for NEW admissions).
+        # None disables; "auto" derives a two-level ladder from `block`.
+        if degrade == "auto":
+            degrade = ({"block": max(1, self.block // 2)},
+                       {"block": max(1, self.block // 4),
+                        "max_new_cap": 4 * self.block})
+        self.degrade_ladder: Tuple[Dict[str, int], ...] = (
+            tuple(degrade) if degrade else ())
+        # pressure thresholds on the WAITING population (hysteresis:
+        # step down at >= high with every lane busy, back up at <= low)
+        self.degrade_high = degrade_high if degrade_high > 0 else 2 * lanes
+        self.degrade_low = max(0, degrade_low)
+        self._degrade_level = 0
+        self.chaos = chaos            # Optional[runtime.chaos.ChaosConfig]
+        self._rounds = 0              # scheduler rounds (run() iterations)
+        self._blackout_on = False
+        self._block_s_ema: Optional[float] = None  # wall secs / decode block
+        self.counters.update({
+            "deadline_expired": 0, "cancelled_requests": 0,
+            "rejected_requests": 0, "shed_requests": 0,
+            "quarantined_lanes": 0, "retried_requests": 0,
+            "failed_requests": 0, "degrade_down": 0, "degrade_up": 0,
+            "chaos_faults": 0, "chaos_stalls": 0, "chaos_blackouts": 0,
+        })
 
     # -- time ----------------------------------------------------------------
 
@@ -1079,7 +1210,7 @@ class ServeLoop:
             "use the returned RequestHandle",
             DeprecationWarning, stacklevel=2)
         req = Request(prompt=np.asarray(request), max_new=max_new,
-                      arrival=float(arrival))
+                      arrival=float(arrival), legacy=True)
         return self._enqueue(req).rid
 
     def _enqueue(self, req: Request) -> RequestHandle:
@@ -1092,6 +1223,18 @@ class ServeLoop:
         self._next_rid += 1
         self._req_by_rid[req.rid] = req
         arrival = float(req.arrival)
+        # un-admittable shapes resolve to a STRUCTURED rejection at
+        # submit instead of wedging `run()` (outcome "rejected"). The
+        # deprecated positional surface keeps its documented
+        # prefill-only max_new=0 behaviour (outcome "done").
+        reason = self._unadmittable(req)
+        if reason is not None:
+            return self._reject_new(req, reason)
+        if self.max_queue and self._waiting_count() >= self.max_queue:
+            victim = self._shed_candidate(req)
+            if victim is None:
+                return self._reject_new(req, "queue full", backpressure=True)
+            self._shed(victim)
         req.bucket = self._bucket_of(req)     # memoized for the scheduler
         if arrival < self._drained_hwm:
             # backdated submit landing AMONG already-drained requests:
@@ -1111,6 +1254,174 @@ class ServeLoop:
                                            req.max_new, t_arrival=arrival,
                                            priority=req.priority)
         return RequestHandle(self, req.rid)
+
+    # -- structured rejection + backpressure ---------------------------------
+
+    def _unadmittable(self, req: Request) -> Optional[str]:
+        """Reason this request can NEVER be served (reject at submit
+        instead of wedging `run()` later), or None when admittable.
+        Legacy-surface requests keep the documented prefill-only
+        `max_new=0` behaviour and are never shape-rejected here."""
+        if req.legacy:
+            return None
+        if len(req.prompt) == 0:
+            return "empty prompt"
+        if req.max_new <= 0:
+            return "max_new <= 0 generates nothing (prefill-only runs " \
+                   "ride the legacy surface)"
+        if isinstance(self.buckets, tuple) and self.buckets \
+                and len(req.prompt) > max(self.buckets):
+            return (f"prompt length {len(req.prompt)} exceeds every "
+                    f"bucket of the pinned grid {self.buckets}")
+        return None
+
+    def _waiting_count(self) -> int:
+        """Current waiting population: arrived-but-unadmitted + future
+        arrivals + drain-reserved (everything `max_queue` bounds)."""
+        return (self._arrived_count + len(self._arrivals)
+                + len(self._reserved))
+
+    def _retry_after(self) -> float:
+        """Suggested resubmit delay for a backpressure rejection: the
+        waiting population's predicted drain time under the observed
+        per-block wall clock (a coarse, monotonic-in-depth hint)."""
+        blk = self._block_s_ema if self._block_s_ema is not None else 0.05
+        depth = self._waiting_count() / max(self.lanes, 1)
+        tokens = np.mean([r.max_new for r in self._arrived_fifo
+                          if not r.admitted] or [self.max_new])
+        return depth * math.ceil(float(tokens) / self.block) * blk
+
+    def _finish_queued(self, req: Request, outcome: str,
+                       detail: str = "") -> None:
+        """Resolve a request that never reached (or no longer holds) a
+        lane with a terminal outcome — the queued-side twin of
+        `_finish_lane`."""
+        st = self.stats[req.rid]
+        now = self._now()
+        if req.resume is not None:             # preempted mid-stream:
+            st.tokens = list(req.resume.outputs)   # keep partial tokens
+            req.resume = None
+        st.outcome = outcome
+        st.detail = detail
+        st.t_done = max(now, st.t_arrival)
+        if st.t_first < st.t_admit:
+            st.t_first = st.t_done
+        req.admitted = True                    # lazy-prune marker
+        self.completed.append(st)
+        self.done.append(st.tokens)
+        self._finished.add(req.rid)
+        self._req_by_rid.pop(req.rid, None)
+
+    def _reject_new(self, req: Request, reason: str,
+                    backpressure: bool = False) -> RequestHandle:
+        """Resolve a just-submitted request as "rejected" without ever
+        queueing it (structured refusal: the handle is immediately done,
+        `stats.retry_after` hints when to resubmit under backpressure)."""
+        self.stats[req.rid] = RequestStats(
+            req.rid, len(req.prompt), max(req.max_new, 0),
+            t_arrival=float(req.arrival), priority=req.priority)
+        self.counters["rejected_requests"] += 1
+        self._finish_queued(req, "rejected", reason)
+        if backpressure:
+            self.stats[req.rid].retry_after = self._retry_after()
+        return RequestHandle(self, req.rid)
+
+    def _shed_candidate(self, new: Request) -> Optional[Request]:
+        """Lowest-priority waiter strictly below `new`'s class — the
+        latest arrival in the worst waiting class (least invested) —
+        or None when nothing outranks: then `new` itself is rejected.
+        O(len(buckets) + future arrivals), not O(backlog)."""
+        worst: Optional[Request] = None
+        if self._bucket_q:
+            key = max(self._bucket_q)          # (-prio, bucket): max = worst
+            worst = self._bucket_q[key][-1]
+        for r in self._arrivals:               # future arrivals spill list
+            if worst is None or r.priority < worst.priority or (
+                    r.priority == worst.priority
+                    and r.arrival >= worst.arrival):
+                worst = r
+        if worst is None or worst.priority >= new.priority:
+            return None
+        return worst
+
+    def _shed(self, victim: Request) -> None:
+        """Drop one waiting request to make room (outcome "rejected",
+        counted as shed; its handle stays valid)."""
+        try:
+            self._arrivals.remove(victim)
+        except ValueError:
+            dq = self._bucket_q.get(self._qkey(victim))
+            dq.remove(victim)
+            if not dq:
+                del self._bucket_q[self._qkey(victim)]
+            self._arrived_count -= 1
+        self.counters["shed_requests"] += 1
+        self.counters["rejected_requests"] += 1
+        self._finish_queued(victim, "rejected", "shed under backpressure")
+        self.stats[victim.rid].retry_after = self._retry_after()
+
+    # -- cancellation + deadlines --------------------------------------------
+
+    def cancel(self, rid: int) -> bool:
+        """Flag one request for cancellation (see RequestHandle.cancel).
+        Resolution happens at the next scheduler round: a waiting
+        request resolves when popped (or swept), an active lane frees at
+        the next block boundary through the in-device active mask."""
+        if rid in self._finished:
+            return False
+        req = self._req_by_rid.get(rid)
+        if req is None:
+            return False
+        req.cancelled = True
+        return True
+
+    def _deadline_over(self, req: Request, now: float) -> bool:
+        return (req.deadline_s is not None
+                and now >= self.stats[req.rid].t_arrival + req.deadline_s)
+
+    def _resolve_dead(self, req: Request, now: Optional[float] = None
+                      ) -> bool:
+        """Resolve a WAITING request that was cancelled or whose
+        deadline expired (True = it is gone; don't admit it). Called at
+        every pop point so the scheduler's O(buckets) round never scans
+        the backlog for corpses."""
+        now = self._now() if now is None else now
+        if req.cancelled:
+            self.counters["cancelled_requests"] += 1
+            self._finish_queued(req, "cancelled")
+            return True
+        if self._deadline_over(req, now):
+            self.counters["deadline_expired"] += 1
+            self._finish_queued(req, "deadline",
+                                f"deadline_s={req.deadline_s} expired "
+                                "before admission")
+            return True
+        return False
+
+    def _sweep_lanes(self, now: float) -> None:
+        """Terminate ACTIVE lanes whose request was cancelled or hit its
+        deadline: clear the host active mask (the next dispatch's
+        in-device mask drops their writes — no recompile) and finish the
+        lane with partial tokens. Runs every scheduler round, so an
+        expired lane frees within one decode block."""
+        for lane in np.flatnonzero(self.active):
+            lane = int(lane)
+            rid = self._lane_rid[lane]
+            req = self._req_by_rid.get(rid) if rid is not None else None
+            if req is None:                    # legacy admit() batch
+                continue
+            if req.cancelled:
+                self.counters["cancelled_requests"] += 1
+                outcome, detail = "cancelled", ""
+            elif self._deadline_over(req, now):
+                self.counters["deadline_expired"] += 1
+                outcome = "deadline"
+                detail = f"deadline_s={req.deadline_s} expired mid-decode"
+            else:
+                continue
+            self.active[lane] = False
+            self.remaining[lane] = 0
+            self._finish_lane(lane, now, outcome=outcome, detail=detail)
 
     def _qkey(self, req: Request) -> Tuple[int, int]:
         """Scheduling-class deque key: sorts as (-priority, bucket)."""
@@ -1291,15 +1602,20 @@ class ServeLoop:
         carry is what the decode block splits once per scanned step:
         a seeded request's sampled stream is a function of (seed,
         tokens generated) alone — identical solo, grouped, on any lane,
-        or across a preempt/resume boundary."""
+        or across a preempt/resume boundary. The pair is memoized on
+        the Request at first admission so a quarantine RETRY replays
+        the identical stream even when the seed came from the loop
+        stream (a re-draw would silently fork the tokens)."""
         if self._req_sampling(req)[0] <= 0:
             return self._key, self._key        # unused in-device
+        if req.seed_keys is not None:
+            return req.seed_keys
         if req.sample_seed is not None:
             base = jax.random.PRNGKey(req.sample_seed)
         else:
             self._key, base = jax.random.split(self._key)
-        draw, carry = jax.random.split(base)
-        return draw, carry
+        req.seed_keys = tuple(jax.random.split(base))
+        return req.seed_keys
 
     def _splice(self, lane: int, req: Request, logits, fresh,
                 bucket: int, prefill_chunks: int = 1,
@@ -1477,8 +1793,11 @@ class ServeLoop:
                         prefix_tokens: int = 0, prefix_exact: bool = False,
                         lane_key=None):
         """Host-side bookkeeping for a request just spliced into `lane`."""
-        self.active[lane] = req.max_new > 0
-        self.remaining[lane] = max(req.max_new, 0)
+        cap = self._degrade_cap()
+        budget = req.max_new if cap is None else min(req.max_new, cap)
+        st_deg = cap is not None and budget < req.max_new
+        self.active[lane] = budget > 0
+        self.remaining[lane] = max(budget, 0)
         self.outputs[lane] = []
         self._lane_rid[lane] = req.rid
         self._set_lane_knobs(lane, req)
@@ -1493,6 +1812,7 @@ class ServeLoop:
         st.group_size = group_size
         st.prefix_tokens = prefix_tokens
         st.prefix_exact = prefix_exact
+        st.degraded = st.degraded or st_deg
         self._admit_seq += 1
         if req.max_new <= 0:                   # prefill-only request
             st.t_first = st.t_admit            # ttft == prefill completion
@@ -1696,6 +2016,53 @@ class ServeLoop:
         self._reserved.extend(group)
         self.counters["reservations"] += len(group)
 
+    # -- graceful degradation ------------------------------------------------
+
+    def _effective_block(self) -> int:
+        """Decode block size under the current degradation level (the
+        ladder's "block" override; level 0 = the configured block). A
+        smaller block both amortizes less AND tightens the decode window
+        (`decode_window(fill, steps)` covers fill + steps), trading peak
+        throughput for shorter admission latency and a finer-grained
+        deadline/cancel/quarantine response — token values are UNCHANGED
+        (block size never enters the per-lane math)."""
+        if not self._degrade_level:
+            return self.block
+        lvl = self.degrade_ladder[self._degrade_level - 1]
+        return max(1, int(lvl.get("block", self.block)))
+
+    def _degrade_cap(self) -> Optional[int]:
+        """Budget cap applied to NEW admissions at the current level
+        (the ladder's "max_new_cap"; None = uncapped). Capped requests
+        complete with outcome "done" and `stats.degraded=True`."""
+        if not self._degrade_level:
+            return None
+        cap = self.degrade_ladder[self._degrade_level - 1].get(
+            "max_new_cap")
+        return int(cap) if cap else None
+
+    def _pressure_tick(self) -> None:
+        """The pressure controller: one hysteresis step per scheduler
+        round. DOWN when every lane is busy, the waiting population is
+        at least `degrade_high`, and `predicted_free_blocks()` says no
+        lane frees within the reservation horizon (genuine sustained
+        pressure, not a drain already in flight); UP when the waiting
+        population falls to `degrade_low`. Every transition counts
+        (`degrade_down`/`degrade_up` — count-class in CI)."""
+        if not self.degrade_ladder:
+            return
+        waiting = self._arrived_count + len(self._reserved)
+        if (waiting >= self.degrade_high
+                and self._degrade_level < len(self.degrade_ladder)
+                and not any(len(f) for f in self.shard_free_lanes())):
+            pred = self.predicted_free_blocks()
+            if pred and min(pred.values()) > max(1, self.reserve_blocks):
+                self._degrade_level += 1
+                self.counters["degrade_down"] += 1
+        elif waiting <= self.degrade_low and self._degrade_level:
+            self._degrade_level -= 1
+            self.counters["degrade_up"] += 1
+
     # -- chunked (time-sliced) admission -------------------------------------
 
     def _needs_chunking(self, bucket: int) -> bool:
@@ -1751,6 +2118,12 @@ class ServeLoop:
         a slice was dispatched."""
         p = self._pending
         if p is None:
+            return False
+        if p.req.cancelled or self._deadline_over(p.req, self._now()):
+            # drop the in-flight sliced prefill: the reserved lane frees
+            # immediately and the remaining slices are never dispatched
+            self._pending = None
+            self._resolve_dead(p.req)
             return False
         c = self.chunk_prefill
         ci = p.next_chunk
@@ -1895,6 +2268,8 @@ class ServeLoop:
             if self._bucket_q[target][0].resume is not None:
                 # preempted request resuming: zero-prefill solo splice
                 req = self._take_bucket(target, 1)[0]
+                if self._resolve_dead(req):
+                    continue
                 self._head_skips = (0 if fifo_head is req
                                     else self._head_skips + 1)
                 self._admit_resumed(free[0], req)
@@ -1916,6 +2291,8 @@ class ServeLoop:
                 target = min(alts)
                 if self._bucket_q[target][0].resume is not None:
                     req = self._take_bucket(target, 1)[0]
+                    if self._resolve_dead(req):
+                        continue
                     self._admit_resumed(free[0], req)
                     n += 1
                     continue
@@ -1926,6 +2303,8 @@ class ServeLoop:
                 # (Request eq=False); only rounds that ADMIT something
                 # consume or earn credit
                 head = self._take_bucket(target, 1)[0]
+                if self._resolve_dead(head):
+                    continue
                 self._head_skips = (0 if fifo_head is head
                                     else self._head_skips + 1)
                 self._start_chunked(free[0], head,
@@ -1940,7 +2319,10 @@ class ServeLoop:
 
     def _admit_chosen(self, free: List[int], group: List[Request]) -> int:
         """Dispatch an already-popped admission group into free lanes
-        (resume-aware: a captured-state head splices without prefill)."""
+        (resume-aware: a captured-state head splices without prefill).
+        Cancelled / deadline-expired members resolve here instead of
+        being admitted — the group shrinks, never the dispatch count."""
+        group = [r for r in group if not self._resolve_dead(r)]
         if not group:
             return 0
         if group[0].resume is not None:
@@ -1962,14 +2344,35 @@ class ServeLoop:
         """Free (admittable) lanes grouped by shard — the scheduler's
         shard-local admission view. A pending sliced prefill's reserved
         lane is excluded, same as the unsharded free-lane rule. Without
-        a mesh this is a single list (shards == 1)."""
+        a mesh this is a single list (shards == 1).
+
+        A chaos shard BLACKOUT hides that shard's free lanes here (a
+        brownout: resident lanes keep decoding, no NEW work lands) —
+        admission routes around it through the most-free-shard rule and
+        the round counter guarantees it expires (`run()` keeps ticking
+        rounds even when nothing else progresses)."""
         free: List[List[int]] = [[] for _ in range(self.shards)]
         for lane in np.flatnonzero(~self.active):
             lane = int(lane)
             if self._pending is not None and lane == self._pending.lane:
                 continue
             free[self._shard_of(lane)].append(lane)
+        if self.chaos is not None and self.chaos.blackout_shard >= 0:
+            black = False
+            for s in range(self.shards):
+                if self.chaos.blacked_out(self._rounds, s):
+                    black = True
+                    free[s] = []
+            if black and not self._blackout_on:
+                self.counters["chaos_blackouts"] += 1
+            self._blackout_on = black
         return free
+
+    def _blackout_active(self) -> bool:
+        return (self.chaos is not None
+                and self.chaos.blackout_shard >= 0
+                and any(self.chaos.blacked_out(self._rounds, s)
+                        for s in range(self.shards)))
 
     def admit(self, prompts: np.ndarray):
         """Deprecated legacy all-lanes admission: prompts
@@ -2055,8 +2458,16 @@ class ServeLoop:
         (token, emitted) pairs with vectorized numpy — no per-token loop.
         Each block dispatches over the fill-covering slot window (see
         `_decode_window`), so step cost tracks the live context.
+
+        Under degradation the default block size follows the ladder
+        (`_effective_block`); with a `ChaosConfig` attached, stalls
+        sleep before the dispatch and the deterministic per-block fault
+        mask rides in as a runtime array (an all-zeros mask is always
+        passed, so the chaos path and the clean path share ONE compiled
+        program). Lanes flagged by the in-device non-finite sentinel
+        are quarantined and their requests retried (`_quarantine_lane`).
         """
-        steps = steps or self.block
+        steps = steps or self._effective_block()
         if self.state is None or not self.active.any():
             return bool(self.active.any())
         window = self._decode_window(steps)
@@ -2065,9 +2476,20 @@ class ServeLoop:
         fn = _lanes_block_fn(_model_key(self.model), steps, window,
                              self.mesh)
         was_active = self.active.copy()
+        blk = self.counters["decode_blocks"]
+        if self.chaos is not None and self.chaos.any_faults:
+            stall = self.chaos.stall(blk)
+            if stall > 0:
+                self.counters["chaos_stalls"] += 1
+                time.sleep(stall)
+            fault = self.chaos.fault_mask(blk, steps, self.lanes)
+            self.counters["chaos_faults"] += int(fault.sum())
+        else:
+            fault = np.zeros((steps, self.lanes), bool)
         if self.mesh is None:
             def put(a, dtype=None):
                 return jnp.asarray(a, dtype)
+            fault_dev = jnp.asarray(fault)
         else:
             # commit every host-side lane array to the P("data") layout
             # (and re-pin the state after any admission splice) so the
@@ -2077,14 +2499,20 @@ class ServeLoop:
 
             def put(a, dtype=None):
                 return jax.device_put(np.asarray(a, dtype), lane_sh)
-        self.state, self.tok, active, rem, keys, toks, emitted = fn(
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            fault_dev = jax.device_put(
+                fault, NamedSharding(self.mesh, P(None, "data")))
+        t_disp = time.monotonic()
+        (self.state, self.tok, active, rem, keys, poison, toks,
+         emitted) = fn(
             self.params, self.state, self.tok,
             put(self.active), put(self.remaining),
             put(self.lane_eos, np.int32),
             put(self._lane_keys, np.uint32),
             put(self.lane_temp, np.float32),
             put(self.lane_topk, np.int32),
-            put(self.lane_topp, np.float32))
+            put(self.lane_topp, np.float32),
+            fault_dev)
         self._lane_keys = np.asarray(keys).astype(np.uint32)
         self.counters["decode_blocks"] += 1
         # knob values ride in as [lanes] arrays, so the jit cache holds ONE
@@ -2092,6 +2520,13 @@ class ServeLoop:
         self.counters["decode_block_programs"] = fn._cache_size()
         host_toks = np.asarray(toks)                       # [steps, lanes]
         host_emit = np.asarray(emitted)                    # [steps, lanes]
+        host_poison = np.asarray(poison)                   # [lanes]
+        # per-block wall seconds (host-sync included): feeds the
+        # backpressure retry_after hint; an EMA so one noisy block
+        # doesn't swing the estimate
+        dt = time.monotonic() - t_disp
+        self._block_s_ema = (dt if self._block_s_ema is None
+                             else 0.8 * self._block_s_ema + 0.2 * dt)
         self.active = np.asarray(active).copy()
         self.remaining = np.asarray(rem).astype(np.int32)
         # per-shard emission accounting (host-side — the ONLY cross-shard
@@ -2107,11 +2542,65 @@ class ServeLoop:
                 if rid is not None:
                     self.stats[rid].t_first = now
             self.outputs[lane].extend(new)
-        for lane in np.flatnonzero(was_active & ~self.active):
+        # poisoned lanes never take the normal EOS/budget finish path —
+        # they are quarantined and their requests retried
+        for lane in np.flatnonzero(was_active & ~self.active
+                                   & ~host_poison):
             self._finish_lane(int(lane), now)
+        for lane in np.flatnonzero(host_poison & was_active):
+            self._quarantine_lane(int(lane), now)
         return bool(self.active.any())
 
-    def _finish_lane(self, lane: int, now: float):
+    def _quarantine_lane(self, lane: int, now: float) -> None:
+        """One lane tripped the non-finite sentinel: free it (its state
+        rows are garbage but fully overwritten by the next admission's
+        splice) and retry the request by FULL deterministic replay —
+        requeued at its arrival rank, re-prefilled from the prompt, with
+        its memoized admission seed (`_seed_keys`) so greedy AND
+        seeded-sampled streams come back token-identical. Partial tokens
+        from the poisoned incarnation are discarded (the replay re-emits
+        them). After `max_retries` quarantines the request resolves with
+        outcome "failed", keeping the clean partial stream."""
+        rid = self._lane_rid[lane]
+        self.counters["quarantined_lanes"] += 1
+        partial = list(self.outputs[lane])
+        self.active[lane] = False
+        self.remaining[lane] = 0
+        self.outputs[lane] = []
+        self._lane_rid[lane] = None
+        self._reset_lane_knobs(lane)
+        req = self._req_by_rid.get(rid) if rid is not None else None
+        st = self.stats.get(rid) if rid is not None else None
+        if req is None:
+            # legacy admit() batch — no Request to replay
+            if st is not None and rid not in self._finished:
+                self.counters["failed_requests"] += 1
+                st.tokens = partial
+                st.outcome = "failed"
+                st.detail = "non-finite logits (legacy lane: no retry)"
+                st.t_done = now
+                if st.t_first < st.t_admit:
+                    st.t_first = now
+                st.occupancy = self._lane_occupancy(lane)
+                self.completed.append(st)
+                self.done.append(st.tokens)
+                self._finished.add(rid)
+            return
+        req.retries += 1
+        st.retries = req.retries
+        st.lane = -1
+        if req.retries > self.max_retries:
+            self.counters["failed_requests"] += 1
+            st.tokens = partial                # keep the clean prefix
+            self._finish_queued(req, "failed",
+                                "non-finite logits; max_retries="
+                                f"{self.max_retries} exhausted")
+        else:
+            self.counters["retried_requests"] += 1
+            self._requeue(req)
+
+    def _finish_lane(self, lane: int, now: float, outcome: str = "done",
+                     detail: str = ""):
         rid = self._lane_rid[lane]
         if rid is None:
             return
@@ -2123,6 +2612,8 @@ class ServeLoop:
             st.t_first = now
         st.tokens = list(self.outputs[lane])
         st.t_done = now
+        st.outcome = outcome
+        st.detail = detail
         st.occupancy = self._lane_occupancy(lane)
         self.completed.append(st)
         self.done.append(st.tokens)
@@ -2130,7 +2621,10 @@ class ServeLoop:
         self._lane_rid[lane] = None
         self._req_by_rid.pop(rid, None)
         self._reset_lane_knobs(lane)
-        if st.max_new > 0:                     # drain-prediction statistics
+        if st.max_new > 0 and outcome == "done":
+            # drain-prediction statistics — natural completions only: a
+            # cancelled/expired lane still has budget left and would
+            # otherwise masquerade as a (short) EOS sample
             if self.remaining[lane] > 0:
                 self._eos_lens.append(len(st.tokens))
                 # class-local sample for predicted_free_blocks: EOS
@@ -2151,24 +2645,70 @@ class ServeLoop:
 
     def run(self) -> List[RequestStats]:
         """Drive until the queue is drained and every lane is idle. Each
-        iteration interleaves (at most) one prefill slice with one decode
-        block, so live lanes keep emitting tokens while a long prompt
-        prefills."""
+        iteration (a scheduler ROUND) sweeps deadlines/cancellations off
+        the active lanes, admits, ticks the pressure controller, then
+        interleaves (at most) one prefill slice with one decode block,
+        so live lanes keep emitting tokens while a long prompt prefills.
+
+        The loop is hang-proof by construction: a round that makes NO
+        progress (nothing admitted, sliced, or decoded) with waiting
+        work, idle lanes, and nothing due to arrive can only mean the
+        scheduler cannot place what is queued — after a few such rounds
+        the stuck requests resolve to structured rejections
+        (`_fail_stuck`) instead of spinning forever. A chaos blackout is
+        exempted (it expires with the round counter)."""
         if self._t0 is None:
             self._t0 = time.monotonic()
+        idle = 0
         while (self._arrived_count or self._arrivals or self._reserved
                or self.active.any() or self._pending is not None):
-            self.schedule()
+            self._rounds += 1
+            self._sweep_lanes(self._now())
+            admitted = self.schedule()
+            self._pressure_tick()
             stepped = self._advance_chunked()
             if self.active.any():
                 self._step_block()
-            elif not stepped:
-                if not self._arrivals:  # e.g. a trailing prefill-only request
-                    continue
-                wait = self._arrivals[0].arrival - self._now()
-                if wait > 0:
-                    time.sleep(min(wait, 0.05))
+            elif stepped or admitted:
+                pass
+            else:
+                # never sleep out the arrival timer of a cancelled
+                # future arrival — resolve it now
+                while self._arrivals and self._arrivals[0].cancelled:
+                    self._resolve_dead(self._arrivals.popleft())
+                if self._arrivals:
+                    wait = self._arrivals[0].arrival - self._now()
+                    if wait > 0:
+                        time.sleep(min(wait, 0.05))
+                elif self._blackout_active():
+                    time.sleep(0.001)   # rounds tick; the blackout expires
+                elif self._arrived_count or self._reserved:
+                    idle += 1
+                    if idle >= 3:
+                        self._fail_stuck()
+                        idle = 0
+                continue
+            idle = 0
         return self.completed
+
+    def _fail_stuck(self) -> None:
+        """Last-resort hang breaker: rounds make zero progress while
+        requests wait, lanes idle, and nothing is pending or arriving —
+        the scheduler cannot place the waiting work (an un-admittable
+        shape that slipped past submit validation, or a scheduler bug).
+        Resolve every waiting request as a structured rejection instead
+        of looping forever."""
+        stuck: List[Request] = list(self._reserved)
+        self._reserved.clear()
+        for key in list(self._bucket_q):
+            dq = self._bucket_q.pop(key)
+            self._arrived_count -= len(dq)
+            stuck.extend(dq)
+        for req in stuck:
+            self.counters["rejected_requests"] += 1
+            self._finish_queued(req, "rejected",
+                                "scheduler made no progress — request "
+                                "cannot be placed")
 
     def prefill_programs(self) -> Dict[str, int]:
         """Compile accounting for the prefill path.

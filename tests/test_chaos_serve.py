@@ -1,0 +1,314 @@
+"""Fault-tolerant serving under injected chaos.
+
+Covers the PR-10 fault-tolerance subsystem end to end against the
+deterministic `runtime.chaos` harness: NaN quarantine + retry replays
+greedy AND seeded-sampled streams token-identically, deadlines and
+cancellation free lanes within one decode block through the in-device
+active mask, the degradation ladder steps down/up with bitwise-unchanged
+healthy lanes, bounded admission sheds/rejects deterministically by
+priority, and the structured-rejection valve closes the silent-hang
+holes (max_new=0, prompt over every bucket) — while an inert engine
+stays bitwise-identical to the pre-chaos one (one compiled block
+program, zero new counters).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.core import baselines
+from repro.launch.serve import Request, SamplingParams, ServeLoop
+from repro.models.transformer import Model
+from repro.runtime.chaos import ChaosConfig, flood
+
+jax.config.update("jax_platform_name", "cpu")
+
+# recent_window differs from the other serving test modules on purpose:
+# block fns are memoized by (cfg, prune, ...) VALUE, so a distinct prune
+# config gives this module its own jit cache — the program-count
+# assertions here and in test_perlane_serving can't see each other's
+# compiled entries regardless of pytest collection order.
+PRUNE = baselines.unicaim(heavy=48, reserve=16, select_k=16,
+                          sink_tokens=2, recent_window=12)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("granite-3-2b"))
+    model = Model(cfg, PRUNE)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompt(cfg, t, seed=0):
+    return np.random.default_rng(seed).integers(0, cfg.vocab_size, t)
+
+
+def _mixed_reqs(cfg):
+    """Greedy + seeded-sampled request set shared by the replay tests."""
+    return [
+        dict(prompt=_prompt(cfg, 16, 1), max_new=8),                  # greedy
+        dict(prompt=_prompt(cfg, 20, 2), max_new=8,
+             sampling=SamplingParams(temperature=0.9, top_k=5),
+             sample_seed=7),
+        dict(prompt=_prompt(cfg, 24, 3), max_new=8,
+             sampling=SamplingParams(temperature=1.0, top_p=0.8),
+             sample_seed=11),
+    ]
+
+
+def _serve(model, params, req_kws, **loop_kw):
+    loop = ServeLoop(model, params, eos=-1, block=4, **loop_kw)
+    hs = [loop.submit(Request(**kw)) for kw in req_kws]
+    loop.run()
+    return loop, hs
+
+
+# -- quarantine + retry -------------------------------------------------------
+
+
+def test_quarantine_retry_replays_token_identically(setup):
+    """A NaN-poisoned lane is quarantined and its request deterministically
+    retried from scratch: greedy lanes replay bitwise, seeded-sampled
+    lanes replay because the stream is f(seed, tokens generated) alone —
+    so EVERY affected request still completes with the clean run's exact
+    token stream."""
+    cfg, model, params = setup
+    reqs = _mixed_reqs(cfg)
+    _, clean = _serve(model, params, reqs, lanes=3)
+
+    chaos = ChaosConfig(seed=3, logit_fault_rate=1.0,
+                        fault_blocks=(1,), fault_lanes=(0, 1))
+    loop, hs = _serve(model, params, reqs, lanes=3, chaos=chaos)
+    assert loop.counters["quarantined_lanes"] >= 2
+    assert loop.counters["retried_requests"] >= 2
+    for h, ref in zip(hs, clean):
+        assert h.outcome == "done"
+        assert h.tokens == ref.tokens
+    retried = [h for h in hs if h.stats.retries]
+    assert len(retried) >= 2
+    assert any(h.stats.retries for h in hs[1:]), "a sampled lane retried"
+
+
+def test_quarantine_exhausted_retries_fails_structurally(setup):
+    """Every block poisons the lane → retries exhaust and the request
+    resolves to outcome "failed" instead of wedging the lane (the engine
+    keeps serving: a healthy lane completes untouched)."""
+    cfg, model, params = setup
+    chaos = ChaosConfig(seed=0, logit_fault_rate=1.0, fault_lanes=(0,))
+    loop = ServeLoop(model, params, lanes=1, eos=-1, block=4,
+                     max_retries=1, chaos=chaos)
+    h = loop.submit(Request(prompt=_prompt(cfg, 16, 1), max_new=8))
+    loop.run()
+    assert h.outcome == "failed"
+    assert h.stats.retries == 2          # original + 1 retry, both poisoned
+    assert loop.counters["failed_requests"] == 1
+    assert loop.counters["quarantined_lanes"] == 2
+
+
+def test_inert_chaos_is_bitwise_free(setup):
+    """A zero-rate ChaosConfig (and no config at all) leaves the engine
+    bitwise-identical: same greedy streams, ONE compiled block program,
+    zero fault-path counters — the sentinel's all-clean `lax.cond` path
+    is the same program the pre-chaos engine ran."""
+    cfg, model, params = setup
+    reqs = _mixed_reqs(cfg)
+    base_loop, base = _serve(model, params, reqs, lanes=3)
+    inert_loop, inert = _serve(model, params, reqs, lanes=3,
+                               chaos=ChaosConfig())
+    for a, b in zip(base, inert):
+        assert a.tokens == b.tokens
+    # the inert engine runs the EXACT programs the chaos-free one built
+    # (the counter reads the shared jit cache: no new entries appeared)
+    assert (inert_loop.counters["decode_block_programs"]
+            == base_loop.counters["decode_block_programs"])
+    for loop in (base_loop, inert_loop):
+        for k in ("quarantined_lanes", "retried_requests", "failed_requests",
+                  "deadline_expired", "cancelled_requests",
+                  "rejected_requests", "degrade_down", "chaos_faults"):
+            assert loop.counters[k] == 0, k
+
+
+# -- deadlines + cancellation -------------------------------------------------
+
+
+def test_deadline_frees_lane_within_one_block(setup):
+    """A mid-decode deadline expiry terminates the lane at the next
+    scheduler round — within ONE decode block — and the freed lane
+    admits the waiting request, which completes normally."""
+    cfg, model, params = setup
+    # A dispatch stall burns the deadline while the lane is mid-stream.
+    chaos = ChaosConfig(stall_blocks=(1,), stall_s=0.25)
+    loop = ServeLoop(model, params, lanes=1, eos=-1, block=4, chaos=chaos)
+    h_dead = loop.submit(Request(prompt=_prompt(cfg, 16, 1), max_new=64,
+                                 deadline_s=0.2))
+    h_next = loop.submit(Request(prompt=_prompt(cfg, 16, 2), max_new=4))
+    loop.run()
+    assert h_dead.outcome == "deadline"
+    assert loop.counters["deadline_expired"] == 1
+    # expired during the stall before block 1: block 1 still lands, the
+    # round after it sweeps the lane — at most 2 blocks ever decoded
+    assert 0 < len(h_dead.tokens) <= 2 * loop.block
+    assert h_next.outcome == "done" and len(h_next.tokens) == 4
+
+
+def test_cancel_active_and_queued(setup):
+    """`RequestHandle.cancel()` resolves a QUEUED request without ever
+    admitting it and terminates an ACTIVE lane with its partial tokens;
+    the freed lane refills and the remaining request still completes."""
+    cfg, model, params = setup
+    loop = ServeLoop(model, params, lanes=1, eos=-1, block=4)
+    h_act = loop.submit(Request(prompt=_prompt(cfg, 16, 1), max_new=64))
+    h_q = loop.submit(Request(prompt=_prompt(cfg, 16, 2), max_new=8))
+    h_ok = loop.submit(Request(prompt=_prompt(cfg, 16, 3), max_new=4))
+    loop.schedule()                        # admit h_act
+    loop._step_block()                     # one block in flight
+    assert h_act.cancel() and h_q.cancel()
+    assert h_q.cancel()                    # idempotent while unresolved
+    loop.run()
+    assert not h_q.cancel()                # terminal → False
+    assert h_act.outcome == "cancelled"
+    assert len(h_act.tokens) == loop.block         # the one decoded block
+    assert h_q.outcome == "cancelled" and h_q.tokens == []
+    assert h_ok.outcome == "done" and len(h_ok.tokens) == 4
+    assert loop.counters["cancelled_requests"] == 2
+
+
+# -- degradation ladder -------------------------------------------------------
+
+
+def test_degradation_ladder_steps_down_and_up(setup):
+    """Sustained queue pressure steps the engine down the ladder (smaller
+    decode block) and draining steps it back up — both transitions
+    counted — while every request's token stream stays bitwise-identical
+    to the undegraded engine (block size never enters the math)."""
+    cfg, model, params = setup
+    reqs = [dict(prompt=_prompt(cfg, 16, s), max_new=16) for s in range(6)]
+    _, clean = _serve(model, params, reqs, lanes=2)
+
+    loop, hs = _serve(model, params, reqs, lanes=2,
+                      degrade=({"block": 2},), degrade_high=2)
+    assert loop.counters["degrade_down"] >= 1
+    assert loop.counters["degrade_up"] >= 1
+    assert loop._degrade_level == 0        # recovered by drain time
+    for h, ref in zip(hs, clean):
+        assert h.outcome == "done"
+        assert h.tokens == ref.tokens
+
+
+def test_degradation_budget_cap_marks_degraded(setup):
+    """A ladder level with `max_new_cap` trims NEW admissions' budgets;
+    capped requests complete "done" with `stats.degraded=True` and
+    exactly the cap's worth of tokens."""
+    cfg, model, params = setup
+    loop = ServeLoop(model, params, lanes=1, eos=-1, block=4,
+                     degrade=({"block": 2, "max_new_cap": 4},),
+                     degrade_high=1, degrade_low=0)
+    hs = [loop.submit(Request(prompt=_prompt(cfg, 16, s), max_new=12))
+          for s in range(4)]
+    loop.run()
+    assert loop.counters["degrade_down"] >= 1
+    capped = [h for h in hs if h.stats.degraded]
+    assert capped, "pressure never capped an admission"
+    for h in capped:
+        assert h.outcome == "done" and len(h.tokens) == 4
+    # the first admission predates the pressure: full budget
+    assert len(hs[0].tokens) == 12 and not hs[0].stats.degraded
+
+
+# -- backpressure -------------------------------------------------------------
+
+
+def test_backpressure_rejects_deterministically_by_priority(setup):
+    """With `max_queue` full: an arriving HIGHER-priority request sheds
+    the lowest-priority waiter (which resolves "rejected" with a
+    `retry_after` hint); an equal-priority arrival is itself rejected.
+    The outcome set is a pure function of the submission sequence —
+    two identical runs resolve identically."""
+    cfg, model, params = setup
+
+    def run_once():
+        loop = ServeLoop(model, params, lanes=1, eos=-1, block=4,
+                         max_queue=2)
+        hs = [loop.submit(Request(prompt=_prompt(cfg, 16, s), max_new=4,
+                                  priority=0))
+              for s in range(4)]           # queue bound 2 → last two reject
+        hi = loop.submit(Request(prompt=_prompt(cfg, 16, 9), max_new=4,
+                                 priority=1))
+        loop.run()
+        return loop, hs, hi
+
+    loop, hs, hi = run_once()
+    # hs[2]/hs[3] found the queue full of their own class → rejected
+    # outright with a backpressure hint
+    for h in (hs[2], hs[3]):
+        assert h.outcome == "rejected"
+        assert h.stats.retry_after >= 0.0
+    # hi outranks the waiters: it sheds the LATEST prio-0 waiter (least
+    # invested) and completes; the earliest waiter survives untouched
+    assert hi.outcome == "done" and len(hi.tokens) == 4
+    assert loop.counters["shed_requests"] == 1
+    assert hs[1].outcome == "rejected"
+    assert "shed" in hs[1].stats.detail
+    assert hs[0].outcome == "done" and len(hs[0].tokens) == 4
+
+    loop2, hs2, hi2 = run_once()
+    assert [h.outcome for h in hs2] == [h.outcome for h in hs]
+    assert hi2.outcome == hi.outcome
+    assert loop2.counters["rejected_requests"] == \
+        loop.counters["rejected_requests"]
+
+
+def test_queue_flood_bounded_and_counted(setup):
+    """A chaos queue flood against a bounded queue: the engine rejects
+    the overflow deterministically, serves exactly what fits, and never
+    wedges — every handle reaches a terminal outcome."""
+    cfg, model, params = setup
+    loop = ServeLoop(model, params, lanes=2, eos=-1, block=4, max_queue=3)
+    hs = [loop.submit(Request(**kw))
+          for kw in flood(cfg.vocab_size, 8, length=16, max_new=4, seed=5)]
+    loop.run()
+    outcomes = [h.outcome for h in hs]
+    assert outcomes.count("done") == 3                # queue bound, pre-run
+    assert outcomes.count("rejected") == 5
+    assert loop.counters["rejected_requests"] == 5
+    assert all(h.done for h in hs)
+
+
+# -- structured rejection of unservable requests (silent-hang valve) ----------
+
+
+def test_unservable_requests_reject_instead_of_hanging(setup):
+    """max_new=0, an empty prompt, and a prompt longer than every pinned
+    bucket each resolve to a structured rejection at submit time — the
+    run loop never spins on work it cannot place — while a well-formed
+    request on the same engine still completes."""
+    cfg, model, params = setup
+    loop = ServeLoop(model, params, lanes=1, eos=-1, block=4,
+                     buckets=(16, 32))
+    h_zero = loop.submit(Request(prompt=_prompt(cfg, 16, 1), max_new=0))
+    h_empty = loop.submit(Request(prompt=np.zeros(0, np.int32), max_new=4))
+    h_long = loop.submit(Request(prompt=_prompt(cfg, 64, 2), max_new=4))
+    h_ok = loop.submit(Request(prompt=_prompt(cfg, 16, 3), max_new=4))
+    for h in (h_zero, h_empty, h_long):
+        assert h.done and h.outcome == "rejected"
+        assert h.tokens == []
+    assert "max_new" in h_zero.stats.detail
+    assert "bucket" in h_long.stats.detail
+    loop.run()
+    assert h_ok.outcome == "done" and len(h_ok.tokens) == 4
+    assert loop.counters["rejected_requests"] == 3
+
+
+def test_legacy_prefill_only_still_done(setup):
+    """The deprecated positional submit keeps its documented
+    prefill-only contract: max_new=0 completes with outcome "done" and
+    zero tokens (no rejection on the legacy surface)."""
+    cfg, model, params = setup
+    loop = ServeLoop(model, params, lanes=1, eos=-1, block=4)
+    with pytest.deprecated_call():
+        rid = loop.submit(_prompt(cfg, 16, 1), max_new=0)
+    loop.run()
+    st = loop.stats[rid]
+    assert st.outcome == "done"
+    assert st.tokens == []
